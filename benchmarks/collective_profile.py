@@ -1,0 +1,46 @@
+"""Collective 'profiler': lower one combo and print the top collective ops
+by execution-weighted bytes with their JAX op_name provenance.
+
+  PYTHONPATH=src python benchmarks/collective_profile.py ARCH SHAPE [multi] [flround] [skip]
+"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    multi = "multi" in sys.argv
+    fl = "flround" in sys.argv
+    skip = "skip" in sys.argv
+    from repro.configs import get_config, long_context_variant
+    from repro.dist.hlo_analysis import weighted_collectives
+    from repro.launch import steps
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import INPUT_SHAPES
+    from repro.optim import adamw
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k":
+        cfg = long_context_variant(cfg)
+    mesh = make_production_mesh(multi_pod=multi)
+    policy = "save_moe_out" if "savemoe" in sys.argv else "full"
+    if fl:
+        lowered = steps.lower_fl_round(cfg, mesh, shape,
+                                       wire_packed="packed" in sys.argv)
+    elif shape.kind == "train":
+        lowered = steps.lower_train_step(cfg, mesh, shape, adamw(3e-4),
+                                         causal_skip=skip, remat_policy=policy)
+    elif shape.kind == "prefill":
+        lowered = steps.lower_prefill_step(cfg, mesh, shape)
+    else:
+        lowered = steps.lower_decode_step(cfg, mesh, shape)
+    hlo = lowered.compile().as_text()
+    res = weighted_collectives(hlo)
+    print(f"total weighted collective bytes/device: {res['total_bytes']/1e9:.2f} GB")
+    for t in res["top_ops"]:
+        print(f"  {t['bytes']/1e9:9.2f} GB  {t['kind']:18s} {t['op']}")
+
+
+if __name__ == "__main__":
+    main()

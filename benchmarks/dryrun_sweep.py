@@ -1,0 +1,92 @@
+"""Run the full (arch x shape x mesh) dry-run sweep as subprocesses.
+
+Each combo runs in a fresh process (jax locks the 512-device XLA flag at
+first init, and isolation keeps one OOM/compile failure from killing the
+sweep). Appends JSONL records to benchmarks/results/dryrun.jsonl.
+
+Usage:
+  PYTHONPATH=src python benchmarks/dryrun_sweep.py [--mesh single|multi|both]
+      [--arch A ...] [--shape S ...] [--fl-round] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "llama3_8b", "seamless_m4t_large_v2", "grok_1_314b", "internvl2_26b",
+    "rwkv6_7b", "phi3_medium_14b", "yi_6b", "starcoder2_7b", "zamba2_7b",
+    "granite_moe_1b_a400m",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_combo(arch: str, shape: str, multi_pod: bool, out: str,
+              fl_round: bool = False, timeout: int = 3600) -> dict:
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--out", out,
+    ]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if fl_round:
+        cmd.append("--fl-round")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    t0 = time.time()
+    try:
+        proc = subprocess.run(
+            cmd, capture_output=True, text=True, timeout=timeout, env=env,
+        )
+        ok = proc.returncode == 0
+        err = "" if ok else proc.stdout[-800:] + proc.stderr[-800:]
+    except subprocess.TimeoutExpired:
+        ok, err = False, f"timeout after {timeout}s"
+    return {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "fl_round": fl_round, "ok": ok,
+        "wall_s": round(time.time() - t0, 1), "err": err,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--arch", nargs="*", default=ARCHS)
+    ap.add_argument("--shape", nargs="*", default=SHAPES)
+    ap.add_argument("--fl-round", action="store_true",
+                    help="also lower the federated round (multi-pod only)")
+    ap.add_argument("--out", default=os.path.join(ROOT, "benchmarks", "results", "dryrun.jsonl"))
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    combos = [
+        (a, s, m) for m in meshes for a in args.arch for s in args.shape
+    ]
+    print(f"sweep: {len(combos)} combos -> {args.out}", flush=True)
+    n_ok = 0
+    for i, (a, s, m) in enumerate(combos):
+        r = run_combo(a, s, m, args.out, timeout=args.timeout)
+        n_ok += r["ok"]
+        print(
+            f"[{i+1}/{len(combos)}] {a} {s} {'multi' if m else 'single'} "
+            f"ok={r['ok']} {r['wall_s']}s {r['err'][:160]}", flush=True,
+        )
+    if args.fl_round:
+        for a in args.arch:
+            r = run_combo(a, "train_4k", True, args.out, fl_round=True,
+                          timeout=args.timeout)
+            print(f"[fl_round] {a} ok={r['ok']} {r['wall_s']}s {r['err'][:160]}", flush=True)
+    print(f"done: {n_ok}/{len(combos)} ok", flush=True)
+    return 0 if n_ok == len(combos) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

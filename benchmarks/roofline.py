@@ -1,0 +1,117 @@
+"""Roofline table generator: reads benchmarks/results/dryrun.jsonl and
+emits the per-(arch x shape x mesh) three-term roofline with the dominant
+bottleneck and MODEL_FLOPS ratio (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT = os.path.join(ROOT, "benchmarks", "results", "dryrun.jsonl")
+
+
+def load(path: str = DEFAULT) -> dict:
+    best = {}
+    for line in open(path):
+        r = json.loads(line)
+        if not r.get("ok"):
+            continue
+        key = (r["arch"], r["shape"], r["mesh"], r.get("step"))
+        best[key] = r
+    return best
+
+
+def model_flops(rec: dict) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) per the assignment, as the
+    'useful compute' yardstick. For decode steps D = batch tokens."""
+    from repro.configs import get_config
+    from repro.models.config import INPUT_SHAPES
+    from repro.launch.inputs import encdec_tgt_len
+
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    n = cfg.active_param_count()
+    if rec["step"] in ("train", "fl_round"):
+        toks = shape.global_batch * (
+            encdec_tgt_len(shape.seq_len) if cfg.family == "encdec" else shape.seq_len
+        )
+        return 6.0 * n * toks
+    if rec["step"] == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    return 2.0 * n * shape.global_batch
+
+
+def rows(best: dict, mesh: str = "16x16", fl: bool = False) -> list[dict]:
+    out = []
+    for (arch, shape, m, step), r in sorted(best.items()):
+        if m != mesh:
+            continue
+        if (step == "fl_round") != fl:
+            continue
+        terms = {
+            "compute": r["compute_term_s"],
+            "memory": r["memory_term_s"],
+            "collective": r["collective_term_s"],
+        }
+        dom = max(terms, key=terms.get)
+        mf = model_flops(r)
+        hlo = r.get("hlo_flops_per_device_raw", 0.0) * r["n_chips"]
+        ana = r.get("analytic_flops_per_device", 0.0) * r["n_chips"]
+        out.append({
+            "arch": arch, "shape": shape, "step": step,
+            **{f"{k}_s": v for k, v in terms.items()},
+            "dominant": dom,
+            "bottleneck_s": terms[dom],
+            "model_flops": mf,
+            "useful_ratio": mf / ana if ana else float("nan"),
+            "hlo_flops_raw_ratio": mf / hlo if hlo else float("nan"),
+            "temp_bytes": r["memory_analysis"]["temp_size_bytes"],
+        })
+    return out
+
+
+def fmt_table(rs: list[dict]) -> str:
+    hdr = (
+        f"{'arch':24s} {'shape':12s} {'step':8s} {'compute_s':>10s} "
+        f"{'memory_s':>10s} {'collect_s':>10s} {'dominant':>10s} "
+        f"{'useful':>7s} {'temp_GB':>8s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rs:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['step']:8s} "
+            f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+            f"{r['collective_s']:10.4f} {r['dominant']:>10s} "
+            f"{r['useful_ratio']:7.2f} {r['temp_bytes']/1e9:8.1f}"
+        )
+    return "\n".join(lines)
+
+
+def bench_rooflines() -> list[tuple]:
+    """CSV rows for benchmarks.run: one per (arch x shape) on 16x16."""
+    best = load()
+    out = []
+    for r in rows(best, "16x16"):
+        out.append((
+            f"roofline[{r['arch']},{r['shape']}]",
+            r["bottleneck_s"] * 1e6,
+            f"dominant={r['dominant']};useful={r['useful_ratio']:.2f}",
+        ))
+    return out
+
+
+if __name__ == "__main__":
+    best = load(sys.argv[1] if len(sys.argv) > 1 else DEFAULT)
+    print("== single-pod 16x16 ==")
+    print(fmt_table(rows(best, "16x16")))
+    print("\n== multi-pod 2x16x16 ==")
+    print(fmt_table(rows(best, "2x16x16")))
+    print("\n== federated rounds (2x16x16, clients = pods) ==")
+    print(fmt_table(rows(best, "2x16x16", fl=True)))

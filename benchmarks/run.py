@@ -1,0 +1,90 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig2   — V trade-off (energy vs accuracy)            [paper Fig. 2]
+  fig3   — FEMNIST-proxy accuracy/energy vs baselines  [paper Fig. 3]
+  fig4   — CIFAR-proxy accuracy/energy vs baselines    [paper Fig. 4]
+  fig5   — quantization level vs rounds / dataset size [paper Fig. 5]
+  kernels— Pallas quant/dequant/aggregate microbench   [Table I payload path]
+  roofline — per (arch x shape) dry-run terms          [§Roofline]
+
+Full-scale variants (paper-size rounds/tasks) are available by calling the
+functions in benchmarks.fl_benchmarks directly; this entrypoint sizes
+everything to finish on the CPU container.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def bench_kernels() -> list[tuple]:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    flat = jax.random.normal(key, (1 << 20,))  # 1M params
+    for q in (2, 4, 8):
+        f = lambda: ops.quantize_flat(key, flat, q)
+        out = f()
+        jax.block_until_ready(out)
+        t0 = time.time()
+        n = 5
+        for _ in range(n):
+            jax.block_until_ready(ops.quantize_flat(key, flat, q))
+        us = (time.time() - t0) / n * 1e6
+        # wire size vs fp32 baseline (paper eq. 5)
+        ratio = (flat.size * q + flat.size + 32) / (flat.size * 32)
+        rows.append((f"kernel_quantize[q={q},Z=1M]", us, f"wire_ratio={ratio:.3f}"))
+    idx, signs, scale = ops.quantize_flat(key, flat, 4)
+    k = 8
+    idxs = jnp.broadcast_to(idx, (k,) + idx.shape)
+    sgns = jnp.broadcast_to(signs, (k,) + signs.shape)
+    scales = jnp.full((k,), scale)
+    w = jnp.full((k,), 1.0 / k)
+    jax.block_until_ready(ops.aggregate_uploads(idxs, sgns, scales, w, 4))
+    t0 = time.time()
+    for _ in range(3):
+        jax.block_until_ready(ops.aggregate_uploads(idxs, sgns, scales, w, 4))
+    rows.append((
+        f"kernel_aggregate[K={k},Z=1M]", (time.time() - t0) / 3 * 1e6,
+        "fused=dequant+weighted_sum",
+    ))
+    return rows
+
+
+def main() -> None:
+    from benchmarks import fl_benchmarks as flb
+
+    t_start = time.time()
+    print("name,us_per_call,derived", flush=True)
+
+    def emit(rows):
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+    emit(bench_kernels())
+    emit(flb.bench_v_tradeoff(task="tiny", n_rounds=10))
+    emit(flb.bench_task("femnist", betas=(300.0,), n_rounds=6))
+    emit(flb.bench_task("tiny", betas=(150.0, 300.0), n_rounds=12))
+    emit(flb.bench_quant_levels(task="femnist", n_rounds=8))
+
+    try:
+        from benchmarks.roofline import bench_rooflines
+
+        emit(bench_rooflines())
+    except FileNotFoundError:
+        emit([("roofline", 0.0, "dryrun.jsonl missing (run dryrun_sweep)")])
+
+    print(f"# total wall: {time.time() - t_start:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Distributed pretraining example: reduced llama3 on a host mesh, with the
+paper's quantized federated round across a 2-client mesh view.
+
+    PYTHONPATH=src python examples/distributed_pretrain.py [--steps 30]
+
+Demonstrates the production API end-to-end ON CPU (1 device): build config
+-> init sharded params -> jit train_step -> run steps -> run a quantized
+FL sync round (the paper's eq. 2 aggregation with per-client q_i).
+On a real pod the same code runs under make_production_mesh().
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--arch", default="llama3_8b")
+    args = ap.parse_args()
+
+    from repro.configs import get_reduced
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import make_fl_round, make_train_step
+    from repro.models import init_params
+    from repro.optim import adamw
+
+    cfg = get_reduced(args.arch)
+    mesh = make_host_mesh()
+    opt = adamw(3e-3)
+
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    opt_state = opt.init(params)
+
+    step_fn, _ = make_train_step(cfg, mesh, opt)
+    step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    B, S = 8, 128
+    rng = np.random.default_rng(0)
+    print(f"pretraining reduced {args.arch} ({cfg.n_layers}L d={cfg.d_model})")
+    for i in range(args.steps):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        batch = {"tokens": toks, "labels": toks, "mask": jnp.ones((B, S))}
+        params, opt_state, metrics = step(params, opt_state, batch)
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:3d} loss {float(metrics['loss']):.4f}")
+
+    # --- one federated round with quantized aggregation (2 clients) -----
+    print("\nfederated quantized sync (paper eq. 2, 2 clients):")
+    n_clients = 2
+    fl_round = make_fl_round(cfg, mesh, lr=1e-3, client_axis="data")
+    # stack the model per client (each client = a copy here on 1 device)
+    client_params = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x] * n_clients), params
+    )
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (n_clients, B, S)), jnp.int32)
+    batch = {
+        "tokens": toks, "labels": toks,
+        "mask": jnp.ones((n_clients, B, S)),
+    }
+    # make_fl_round reads the client count from the mesh axis; on the host
+    # mesh the 'data' axis is 1, so vmap over our explicit client dim:
+    q_bits = jnp.array([4, 8], jnp.int32)         # doubly adaptive levels
+    weights = jnp.array([0.3, 0.7], jnp.float32)  # w_i = D_i / D^n
+
+    from repro.core.quantization import quantize_pytree
+
+    keys = jax.random.split(jax.random.PRNGKey(1), n_clients)
+    quantized, tmax = jax.vmap(quantize_pytree)(keys, client_params, q_bits)
+    agg = jax.tree_util.tree_map(
+        lambda leaf: jnp.einsum("k...,k->...", leaf.astype(jnp.float32), weights),
+        quantized,
+    )
+    drift = jax.tree_util.tree_map(
+        lambda a, p: float(jnp.abs(a - p).max()), agg, params
+    )
+    print("max |aggregate - model| per top-level key:")
+    for k, v in drift.items():
+        flat = jax.tree_util.tree_leaves(v)
+        print(f"  {k:12s} {max(flat):.5f}")
+    print("theta_max per client:", [float(t) for t in tmax])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Serving example: batched decode with a reduced model + KV cache.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch starcoder2_7b]
+
+Prefills a batch of contexts, then decodes 32 tokens per request with the
+ring-buffer (sliding-window) cache — the same serve_step the dry-run
+lowers for decode_32k / long_500k at production scale.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2_7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--context", type=int, default=96)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    from repro.configs import get_reduced
+    from repro.models import decode_step, init_params
+    from repro.models.decode import encode, init_cache, prefill
+
+    cfg = get_reduced(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    rng = np.random.default_rng(0)
+    b = args.batch
+    ctx = jnp.asarray(rng.integers(0, cfg.vocab, (b, args.context)), jnp.int32)
+
+    total = args.context + args.new_tokens
+    if cfg.family == "encdec":
+        cache = init_cache(cfg, b, total)
+        cache = encode(cfg, params, cache,
+                       jnp.asarray(rng.normal(size=(b, args.context, cfg.d_model)),
+                                   jnp.float32))
+        logits = jnp.zeros((b, cfg.vocab))
+    else:
+        t0 = time.time()
+        logits, cache = prefill(cfg, params, {"tokens": ctx}, total)
+        print(f"prefill {args.context} tokens x{b}: {time.time()-t0:.2f}s")
+
+    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    tokens = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tokens]
+    t0 = time.time()
+    for i in range(args.new_tokens):
+        logits, cache = step(params, cache, tokens)
+        tokens = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tokens)
+    jax.block_until_ready(tokens)
+    dt = time.time() - t0
+    print(
+        f"decoded {args.new_tokens} tokens x{b} reqs in {dt:.2f}s "
+        f"({args.new_tokens * b / dt:.1f} tok/s greedy)"
+    )
+    gen = jnp.stack(out, axis=1)
+    print("greedy continuations (token ids):")
+    for r in range(b):
+        print(f"  req{r}: {list(np.asarray(gen[r][:12]))}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""npz-based pytree checkpointing (offline substrate; no orbax).
+
+Layout: <dir>/step_<N>.npz holding flattened leaves keyed by path, plus a
+JSON sidecar with the treedef paths and metadata. Atomic via temp+rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten_with_paths(tree: Pytree, prefix: str = "") -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_with_paths(v, f"{prefix}/{k}" if prefix else str(k)))
+        return out
+    out[prefix] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Pytree:
+    root: dict = {}
+    for path, arr in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return root
+
+
+def save_checkpoint(directory: str, step: int, params: Pytree,
+                    extra: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(jax.device_get(params))
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    meta = {"step": step, "keys": sorted(flat), **(extra or {})}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(f[len("step_"):-len(".npz")])
+        for f in os.listdir(directory)
+        if f.startswith("step_") and f.endswith(".npz")
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: Optional[int] = None) -> tuple[Pytree, dict]:
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    return _unflatten(flat), meta

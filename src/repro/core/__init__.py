@@ -1,0 +1,23 @@
+from repro.core.bounds import BoundConstants, data_term, quant_term
+from repro.core.controller import QCCFController, auto_epsilons
+from repro.core.genetic import (
+    Decision,
+    GAConfig,
+    RoundContext,
+    SystemParams,
+    evaluate_assignment,
+    run_ga,
+)
+from repro.core.kkt import ClientDecision, ClientEnv, solve_client
+from repro.core.lyapunov import LyapunovState
+from repro.core.quantization import (
+    QuantizedUpload,
+    dequantize_indices,
+    payload_bits,
+    pytree_size,
+    quantize_array,
+    quantize_indices,
+    quantize_pytree,
+    quantize_upload,
+    variance_bound,
+)

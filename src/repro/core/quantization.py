@@ -1,0 +1,152 @@
+"""Stochastic model quantization (paper Sec. II-B, eq. 4/5, Lemma 1).
+
+The paper quantizes a model vector theta in R^Z with q bits per dimension:
+
+  * the range is theta_max = max_z |theta_z|,
+  * [0, theta_max] is split into 2^q - 1 intervals with knobs
+    k_u = u * theta_max / (2^q - 1),
+  * |theta_z| in [k_u, k_{u+1}) is stochastically rounded to k_u or k_{u+1}
+    with probabilities proportional to the distance to the other knob
+    (eq. 4), keeping the sign.
+
+Lemma 1: E[Q(theta)] = theta and
+         E||Q(theta) - theta||^2 <= Z * theta_max^2 / (4 (2^q - 1)^2).
+
+Payload length (eq. 5): ell = Z*q + Z + 32   (indexes + signs + fp32 range).
+
+This module is the *reference* JAX implementation used by the FL runtime
+and as the oracle for the Pallas kernels in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+RANGE_BITS = 32  # the scalar range is transmitted as one fp32 (paper eq. 5)
+
+
+def payload_bits(z: int, q: int) -> int:
+    """Uplink payload length in bits for a Z-dim model at level q (eq. 5)."""
+    return z * int(q) + z + RANGE_BITS
+
+
+def variance_bound(z: int, theta_max: float, q) -> jnp.ndarray:
+    """Lemma 1 variance bound: Z * theta_max^2 / (4 (2^q - 1)^2)."""
+    levels = 2.0 ** jnp.asarray(q, jnp.float32) - 1.0
+    return z * jnp.asarray(theta_max, jnp.float32) ** 2 / (4.0 * levels**2)
+
+
+def quantize_array(
+    key: jax.Array, x: jax.Array, q_bits: jax.Array | int
+) -> tuple[jax.Array, jax.Array]:
+    """Stochastically quantize ``x`` to ``q_bits`` levels (eq. 4).
+
+    Returns ``(xq, theta_max)`` where ``xq`` is the dequantized float
+    representation (i.e. what the server reconstructs). ``q_bits`` may be a
+    traced scalar so a single compiled step can serve any level.
+    """
+    x = jnp.asarray(x)
+    levels = 2.0 ** jnp.asarray(q_bits, jnp.float32) - 1.0
+    theta_max = jnp.max(jnp.abs(x))
+    # Guard the all-zero tensor: scale of 0 would produce NaNs.
+    safe_max = jnp.where(theta_max > 0, theta_max, 1.0)
+    scaled = jnp.abs(x) * (levels / safe_max)          # in [0, levels]
+    lower = jnp.floor(scaled)
+    frac = scaled - lower                              # P(round up)
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    idx = lower + (u < frac).astype(jnp.float32)       # stochastic round
+    xq = jnp.sign(x) * idx * (safe_max / levels)
+    xq = jnp.where(theta_max > 0, xq, jnp.zeros_like(x))
+    return xq.astype(x.dtype), theta_max
+
+
+def quantize_indices(
+    key: jax.Array, x: jax.Array, q_bits: jax.Array | int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Like :func:`quantize_array` but returns the wire format:
+    (uint index per dim, sign bit per dim, fp32 range).
+
+    The index fits in ``q_bits`` bits; we store it in the smallest uint dtype
+    that holds the *static* maximum level (uint8 for q<=8, else uint16).
+    """
+    x = jnp.asarray(x)
+    levels = 2.0 ** jnp.asarray(q_bits, jnp.float32) - 1.0
+    theta_max = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    safe_max = jnp.where(theta_max > 0, theta_max, 1.0)
+    scaled = jnp.abs(x).astype(jnp.float32) * (levels / safe_max)
+    lower = jnp.floor(scaled)
+    frac = scaled - lower
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    idx = lower + (u < frac).astype(jnp.float32)
+    static_q = int(q_bits) if not isinstance(q_bits, jax.core.Tracer) else 16
+    dtype = jnp.uint8 if static_q <= 8 else jnp.uint16
+    signs = (x < 0).astype(jnp.uint8)
+    return idx.astype(dtype), signs, theta_max
+
+
+def dequantize_indices(
+    idx: jax.Array, signs: jax.Array, theta_max: jax.Array, q_bits: jax.Array | int
+) -> jax.Array:
+    """Reconstruct the float tensor from the wire format."""
+    levels = 2.0 ** jnp.asarray(q_bits, jnp.float32) - 1.0
+    mag = idx.astype(jnp.float32) * (theta_max / levels)
+    return jnp.where(signs > 0, -mag, mag)
+
+
+def quantize_pytree(
+    key: jax.Array, tree: Pytree, q_bits: jax.Array | int
+) -> tuple[Pytree, jax.Array]:
+    """Quantize every leaf with a *shared global range* over the flat vector.
+
+    The paper treats the model as one flat Z-dim vector with a single range
+    (eq. 5 transmits one 32-bit range). We mirror that: theta_max is the max
+    |.| over all leaves, then each leaf is quantized against it.
+    Returns (dequantized tree, theta_max).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    theta_max = jnp.max(
+        jnp.stack([jnp.max(jnp.abs(leaf)) for leaf in leaves])
+    ).astype(jnp.float32)
+    safe_max = jnp.where(theta_max > 0, theta_max, 1.0)
+    levels = 2.0 ** jnp.asarray(q_bits, jnp.float32) - 1.0
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, leaf in zip(keys, leaves):
+        scaled = jnp.abs(leaf).astype(jnp.float32) * (levels / safe_max)
+        lower = jnp.floor(scaled)
+        frac = scaled - lower
+        u = jax.random.uniform(k, leaf.shape, jnp.float32)
+        idx = lower + (u < frac).astype(jnp.float32)
+        xq = jnp.sign(leaf).astype(jnp.float32) * idx * (safe_max / levels)
+        xq = jnp.where(theta_max > 0, xq, jnp.zeros_like(xq))
+        out.append(xq.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), theta_max
+
+
+def pytree_size(tree: Pytree) -> int:
+    """Z: total number of scalar dimensions in the model."""
+    return sum(int(leaf.size) for leaf in jax.tree_util.tree_leaves(tree))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedUpload:
+    """What a client puts on the uplink (simulation bookkeeping)."""
+
+    tree: Pytree          # dequantized model (what the server reconstructs)
+    theta_max: jax.Array  # fp32 range scalar
+    q_bits: int           # quantization level used
+    z: int                # model dimension
+
+    @property
+    def bits(self) -> int:
+        return payload_bits(self.z, self.q_bits)
+
+
+def quantize_upload(key: jax.Array, tree: Pytree, q_bits: int) -> QuantizedUpload:
+    tq, tmax = quantize_pytree(key, tree, q_bits)
+    return QuantizedUpload(tree=tq, theta_max=tmax, q_bits=int(q_bits), z=pytree_size(tree))

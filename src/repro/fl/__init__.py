@@ -1,0 +1,3 @@
+from repro.fl.client import FLClient
+from repro.fl.experiment import build_experiment, run_policy
+from repro.fl.trainer import ExperimentResult, FLExperiment, Policy

@@ -1,0 +1,61 @@
+"""FL client: tau local SGD updates + stochastic quantization (Fig. 1 step 3)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _local_sgd(loss_fn, tau: int, params: Pytree, batches: dict, lr) -> tuple[Pytree, jax.Array, jax.Array]:
+    """tau SGD steps over pre-stacked minibatches (leading axis tau).
+
+    Returns (new_params, mean grad-norm^2 estimate, per-step grad variance
+    proxy) — the latter two feed the controller's G_i / sigma_i estimators.
+    """
+
+    def step(carry, batch):
+        p, gsq_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+        gsq = sum(jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(grads))
+        p = jax.tree_util.tree_map(lambda w, g: w - lr * g, p, grads)
+        return (p, gsq_acc + gsq), (loss, gsq)
+
+    (params, gsq_acc), (losses, gsqs) = jax.lax.scan(step, (params, 0.0), batches)
+    g_mean = gsq_acc / tau
+    g_var = jnp.var(gsqs)
+    return params, g_mean, g_var
+
+
+class FLClient:
+    """Holds the local dataset and runs local updates on demand."""
+
+    def __init__(
+        self, cid: int, data: dict, loss_fn: Callable, batch_size: int = 32,
+        seed: int = 0,
+    ) -> None:
+        self.cid = cid
+        self.data = data
+        self.loss_fn = loss_fn
+        self.batch_size = min(batch_size, data["x"].shape[0])
+        self.rng = np.random.default_rng(seed + cid)
+        self.d_size = int(data["x"].shape[0])
+
+    def _draw_batches(self, tau: int) -> dict:
+        n = self.data["x"].shape[0]
+        idx = self.rng.integers(0, n, size=(tau, self.batch_size))
+        return {
+            "x": jnp.asarray(self.data["x"][idx]),
+            "y": jnp.asarray(self.data["y"][idx]),
+        }
+
+    def local_update(self, params: Pytree, tau: int, lr: float):
+        """Returns (theta_i^{n,tau}, G_i^2 estimate, sigma_i^2 estimate)."""
+        batches = self._draw_batches(tau)
+        new_params, g_sq, g_var = _local_sgd(self.loss_fn, tau, params, batches, lr)
+        return new_params, float(g_sq), float(g_var)

@@ -1,0 +1,126 @@
+"""Experiment assembly: build a full FL setup for a task + policy name.
+
+This is what benchmarks and examples call:
+
+    res = run_policy("qccf", task="femnist", beta=150, n_rounds=100, v=100)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import QCCFController, auto_epsilons
+from repro.core.genetic import GAConfig, RoundContext, SystemParams
+from repro.data.synthetic import (
+    CIFAR10_PROXY,
+    FEMNIST_PROXY,
+    TINY_TASK,
+    SyntheticImageTask,
+    gaussian_sizes,
+    make_federated_datasets,
+    make_test_set,
+)
+from repro.fl.client import FLClient
+from repro.fl.trainer import ExperimentResult, FLExperiment, Policy
+from repro.models import cnn
+from repro.wireless.channel import ChannelModel, ChannelParams
+from repro.wireless.system import CIFAR10_SYSTEM, FEMNIST_SYSTEM
+
+TASKS = {
+    "femnist": (FEMNIST_PROXY, cnn.FEMNIST_CNN, FEMNIST_SYSTEM),
+    "cifar10": (CIFAR10_PROXY, cnn.CIFAR10_CNN, CIFAR10_SYSTEM),
+    "tiny": (TINY_TASK, cnn.TINY_CNN, FEMNIST_SYSTEM),
+}
+
+
+def build_experiment(
+    policy_name: str,
+    task: str = "tiny",
+    *,
+    n_clients: int = 10,
+    n_channels: int = 10,
+    mu: float = 1200.0,
+    beta: float = 150.0,
+    v_weight: float = 100.0,
+    alpha_dirichlet: float = 0.5,
+    lr: float = 0.05,
+    seed: int = 0,
+    ga: Optional[GAConfig] = None,
+) -> FLExperiment:
+    task_spec, cnn_cfg, sysp = TASKS[task]
+    if task == "tiny":
+        mu, beta = min(mu, 200.0), min(beta, 40.0)
+    img_task = SyntheticImageTask(task_spec, seed=seed)
+    sizes = gaussian_sizes(n_clients, mu, beta, seed=seed)
+    datasets = make_federated_datasets(img_task, n_clients, sizes,
+                                       alpha=alpha_dirichlet, seed=seed)
+    test = make_test_set(img_task, n=1024, seed=seed + 999)
+    test_j = {"x": jnp.asarray(test["x"]), "y": jnp.asarray(test["y"])}
+
+    loss_fn = functools.partial(cnn.loss_fn, cnn_cfg)
+    params = cnn.init_params(cnn_cfg, jax.random.PRNGKey(seed))
+    clients = [
+        FLClient(i, datasets[i], loss_fn, batch_size=32, seed=seed)
+        for i in range(n_clients)
+    ]
+
+    @jax.jit
+    def _eval(p):
+        logits = cnn.forward(cnn_cfg, p, test_j["x"])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, test_j["y"][:, None], axis=-1)[:, 0]
+        acc = jnp.mean((jnp.argmax(logits, -1) == test_j["y"]).astype(jnp.float32))
+        return acc, jnp.mean(logz - gold)
+
+    def eval_fn(p):
+        acc, loss = _eval(p)
+        return float(acc), float(loss)
+
+    channel = ChannelModel(
+        ChannelParams(n_clients=n_clients, n_channels=n_channels), seed=seed
+    )
+    z = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+    ga = ga or GAConfig(generations=12, population=20)
+
+    # budgets from a nominal schedule (see controller.auto_epsilons)
+    probe = RoundContext(
+        rates=channel.draw_rates(), d_sizes=sizes.astype(np.float64),
+        g_sq=np.full(n_clients, 1.0), sigma_sq=np.full(n_clients, 1.0),
+        theta_max=np.full(n_clients, 1.0), z=z,
+    )
+    eps1, eps2 = auto_epsilons(probe, sysp, target_q=6.0)
+
+    from repro.fl import baselines
+
+    def make_controller():
+        return QCCFController(
+            n_clients, sysp, v_weight=v_weight, eps1=eps1, eps2=eps2,
+            ga=ga, seed=seed,
+        )
+
+    policy: Policy
+    if policy_name == "qccf":
+        policy = baselines.QCCFPolicy(make_controller())
+    elif policy_name == "no_quant":
+        policy = baselines.NoQuantPolicy(sysp)
+    elif policy_name == "channel_allocate":
+        policy = baselines.ChannelAllocatePolicy(sysp)
+    elif policy_name == "principle_24":
+        policy = baselines.PrinciplePolicy(sysp)
+    elif policy_name == "same_size_26":
+        policy = baselines.SameSizePolicy(make_controller())
+    else:
+        raise ValueError(policy_name)
+
+    return FLExperiment(
+        clients, params, eval_fn, channel, sysp, policy, lr=lr, seed=seed
+    )
+
+
+def run_policy(policy_name: str, n_rounds: int = 50, **kw) -> ExperimentResult:
+    exp = build_experiment(policy_name, **kw)
+    return exp.run(n_rounds, eval_every=max(n_rounds // 25, 1))

@@ -1,0 +1,2 @@
+from repro.kernels import ops, ref
+from repro.kernels.stochastic_quant import aggregate, dequantize, quantize

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the quantization kernel family.
+
+All kernels operate on the canonical wire layout:
+  x      : (M, 128) fp32/bf16 tile-padded flat model chunk
+  rbits  : (M, 128) uint32 random bits (stochastic rounding entropy)
+  scale  : ()       fp32 theta_max (global range, paper eq. 4)
+  q_bits : int      static quantization level (1..8 -> uint8 indexes)
+
+Wire format (paper eq. 5: indexes + signs + 32-bit range):
+  idx    : (M, 128) uint8   magnitude knob index in [0, 2^q - 1]
+  signs  : (M, 128) uint8   1 = negative
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_from_bits(rbits: jax.Array) -> jax.Array:
+    """uint32 -> [0, 1) fp32 with 24-bit mantissa precision."""
+    return (rbits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+
+
+def quantize_ref(
+    x: jax.Array, rbits: jax.Array, scale: jax.Array, q_bits: int
+) -> tuple[jax.Array, jax.Array]:
+    levels = jnp.float32(2.0**q_bits - 1.0)
+    safe = jnp.where(scale > 0, scale, 1.0).astype(jnp.float32)
+    scaled = jnp.abs(x.astype(jnp.float32)) * (levels / safe)
+    scaled = jnp.minimum(scaled, levels)  # guard |x| == scale round-up
+    lower = jnp.floor(scaled)
+    frac = scaled - lower
+    u = uniform_from_bits(rbits)
+    idx = lower + (u < frac).astype(jnp.float32)
+    idx = jnp.minimum(idx, levels)
+    return idx.astype(jnp.uint8), (x < 0).astype(jnp.uint8)
+
+
+def dequantize_ref(
+    idx: jax.Array, signs: jax.Array, scale: jax.Array, q_bits: int
+) -> jax.Array:
+    levels = jnp.float32(2.0**q_bits - 1.0)
+    mag = idx.astype(jnp.float32) * (scale.astype(jnp.float32) / levels)
+    return jnp.where(signs > 0, -mag, mag)
+
+
+def aggregate_ref(
+    idx: jax.Array,      # (K, M, 128) uint8
+    signs: jax.Array,    # (K, M, 128) uint8
+    scales: jax.Array,   # (K,) fp32
+    weights: jax.Array,  # (K,) fp32
+    q_bits: int,
+) -> jax.Array:
+    """Server aggregation (paper eq. 2): sum_k w_k * dequant_k. fp32 out."""
+    levels = jnp.float32(2.0**q_bits - 1.0)
+    mag = idx.astype(jnp.float32) * (scales / levels)[:, None, None]
+    val = jnp.where(signs > 0, -mag, mag)
+    return jnp.einsum("kmc,k->mc", val, weights)

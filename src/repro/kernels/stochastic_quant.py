@@ -1,0 +1,136 @@
+"""Pallas TPU kernels: stochastic quantize / dequantize / fused aggregate.
+
+TPU adaptation of the paper's eq. 4 quantizer (Sec. II-B):
+  * the model vector is tiled (M, 128) — lane dim 128 matches the VPU;
+  * blocks of (BLOCK_M, 128) live in VMEM; the fp32 range scalar rides in
+    SMEM via a (1, 1) block;
+  * stochastic rounding consumes pre-generated uint32 entropy (kept as an
+    explicit input so the kernel is deterministic and oracle-testable);
+  * magnitude indexes store as uint8 (q <= 8 covers the paper's operating
+    regime, Fig. 5) and signs as a separate uint8 plane — exactly the
+    paper's wire format ``Z*q + Z + 32`` bits, so the aggregation kernel
+    (eq. 2) can consume the packed uplink directly.
+
+The fused aggregate kernel folds K clients' dequantize + weighted sum into
+one VMEM pass: out = sum_k w_k * sign_k * idx_k * (scale_k / levels_k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 256
+LANES = 128
+
+
+def _quant_kernel(x_ref, rbits_ref, scale_ref, idx_ref, sign_ref, *, q_bits: int):
+    levels = jnp.float32(2.0**q_bits - 1.0)
+    scale = scale_ref[0, 0]
+    safe = jnp.where(scale > 0, scale, 1.0)
+    x = x_ref[...].astype(jnp.float32)
+    scaled = jnp.minimum(jnp.abs(x) * (levels / safe), levels)
+    lower = jnp.floor(scaled)
+    frac = scaled - lower
+    u = (rbits_ref[...] >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+    idx = jnp.minimum(lower + (u < frac).astype(jnp.float32), levels)
+    idx_ref[...] = idx.astype(jnp.uint8)
+    sign_ref[...] = (x < 0).astype(jnp.uint8)
+
+
+def quantize(
+    x: jax.Array, rbits: jax.Array, scale: jax.Array, q_bits: int,
+    *, interpret: bool = True, block_m: int = BLOCK_M,
+) -> tuple[jax.Array, jax.Array]:
+    """x, rbits: (M, 128); scale: () fp32. Returns (idx u8, signs u8)."""
+    m, lanes = x.shape
+    assert lanes == LANES and m % block_m == 0, (x.shape, block_m)
+    grid = (m // block_m,)
+    kernel = functools.partial(_quant_kernel, q_bits=q_bits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, LANES), jnp.uint8),
+            jax.ShapeDtypeStruct((m, LANES), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(x, rbits, scale.reshape(1, 1))
+
+
+def _dequant_kernel(idx_ref, sign_ref, scale_ref, out_ref, *, q_bits: int):
+    levels = jnp.float32(2.0**q_bits - 1.0)
+    scale = scale_ref[0, 0]
+    mag = idx_ref[...].astype(jnp.float32) * (scale / levels)
+    out_ref[...] = jnp.where(sign_ref[...] > 0, -mag, mag)
+
+
+def dequantize(
+    idx: jax.Array, signs: jax.Array, scale: jax.Array, q_bits: int,
+    *, interpret: bool = True, block_m: int = BLOCK_M,
+) -> jax.Array:
+    m, lanes = idx.shape
+    assert lanes == LANES and m % block_m == 0
+    kernel = functools.partial(_dequant_kernel, q_bits=q_bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, LANES), jnp.float32),
+        interpret=interpret,
+    )(idx, signs, scale.reshape(1, 1))
+
+
+def _aggregate_kernel(idx_ref, sign_ref, coef_ref, out_ref, *, n_clients: int):
+    """coef[k] = weights[k] * scales[k] / levels[k] precomputed on host —
+    the kernel is a pure weighted magnitude sum (one VMEM pass)."""
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for k in range(n_clients):  # static unroll: K is small (<= 32 experts.. clients)
+        mag = idx_ref[k].astype(jnp.float32)
+        val = jnp.where(sign_ref[k] > 0, -mag, mag)
+        acc = acc + coef_ref[0, k] * val
+    out_ref[...] = acc
+
+
+def aggregate(
+    idx: jax.Array,      # (K, M, 128) uint8
+    signs: jax.Array,    # (K, M, 128) uint8
+    scales: jax.Array,   # (K,) fp32
+    weights: jax.Array,  # (K,) fp32
+    q_bits,              # int or (K,) array of per-client levels
+    *, interpret: bool = True, block_m: int = BLOCK_M,
+) -> jax.Array:
+    k, m, lanes = idx.shape
+    assert lanes == LANES and m % block_m == 0
+    qb = jnp.broadcast_to(jnp.asarray(q_bits, jnp.float32), (k,))
+    levels = 2.0**qb - 1.0
+    coef = (weights * scales / levels).astype(jnp.float32).reshape(1, k)
+    kernel = functools.partial(_aggregate_kernel, n_clients=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((k, block_m, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, block_m, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0), memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, LANES), jnp.float32),
+        interpret=interpret,
+    )(idx, signs, coef)

@@ -1,0 +1,75 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run lowering).
+
+Per the assignment:
+  * ``train_*``  -> a training batch (tokens/labels/mask; modality stubs
+    provide frame/patch embeddings for [audio]/[vlm] archs);
+  * ``prefill_*`` -> the context batch for cache build;
+  * ``decode_*`` -> ONE new token + a KV/state cache of ``seq_len``.
+
+enc-dec convention (seamless): the shape's ``seq_len`` is the *source*
+(audio-frame) length; the target length is seq_len // 8 (speech-to-text
+compression ratio), min 128. Documented in DESIGN.md.
+VLM convention (internvl2): ``n_vis_tokens`` stub patch embeddings are
+prepended and the text length is seq_len - n_vis_tokens, so the total
+context matches the assigned shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache_spec
+from repro.models.config import InputShape, ModelConfig
+
+F = jax.ShapeDtypeStruct
+
+
+def _tok(shape, dtype=jnp.int32):
+    return F(shape, dtype)
+
+
+def encdec_tgt_len(seq_len: int) -> int:
+    return max(seq_len // 8, 128)
+
+
+def train_batch_spec(cfg: ModelConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        st = encdec_tgt_len(s)
+        return {
+            "src_embeds": F((b, s, cfg.d_model), jnp.bfloat16),
+            "tokens": _tok((b, st)),
+            "labels": _tok((b, st)),
+            "mask": F((b, st), jnp.float32),
+        }
+    if cfg.family == "vlm":
+        st = s - cfg.n_vis_tokens
+        return {
+            "vis_embeds": F((b, cfg.n_vis_tokens, cfg.d_model), jnp.bfloat16),
+            "tokens": _tok((b, st)),
+            "labels": _tok((b, st)),
+            "mask": F((b, st), jnp.float32),
+        }
+    return {
+        "tokens": _tok((b, s)),
+        "labels": _tok((b, s)),
+        "mask": F((b, s), jnp.float32),
+    }
+
+
+def decode_inputs_spec(cfg: ModelConfig, shape: InputShape) -> tuple:
+    """(tokens, cache) ShapeDtypeStructs for one decode step."""
+    b, s = shape.global_batch, shape.seq_len
+    src = s if cfg.family == "encdec" else 0
+    cache = cache_spec(cfg, b, s, src_len=src)
+    return _tok((b,)), cache
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """The full stand-in set for (arch x shape), keyed by step argument."""
+    if shape.kind == "train":
+        return {"batch": train_batch_spec(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": train_batch_spec(cfg, shape)}
+    tokens, cache = decode_inputs_spec(cfg, shape)
+    return {"tokens": tokens, "cache": cache}

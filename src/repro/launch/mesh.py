@@ -1,0 +1,21 @@
+"""Production meshes. Functions (not module constants) so importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke tests."""
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))

@@ -1,0 +1,22 @@
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.model import (
+    abstract_params,
+    forward_logits,
+    forward_train,
+    init_params,
+)
+from repro.models.decode import cache_spec, decode_step, init_cache, prefill
+
+__all__ = [
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "abstract_params",
+    "forward_logits",
+    "forward_train",
+    "init_params",
+    "cache_spec",
+    "decode_step",
+    "init_cache",
+    "prefill",
+]

@@ -1,0 +1,426 @@
+"""Serving path: cache construction + single-token decode per family.
+
+Cache layouts (leading L axis so the layer loop is a ``lax.scan``):
+  dense/moe/vlm : k/v ring buffers (L, B, Lc, KV, hd) + slot_pos (Lc,)
+  ssm (rwkv6)   : wkv state (L, B, H, N, N) + two token-shift carries
+  hybrid        : mamba ssm/conv states per layer + shared-attn ring buffer
+  encdec        : decoder self-attn ring buffer + precomputed cross k/v
+
+``Lc = cfg.effective_cache_len(seq_len)``: the ring buffer is bounded by
+the sliding window when the config sets one, which is what makes
+``long_500k`` lowerable for the dense families.
+
+RoPE is applied to keys at *write* time with absolute positions, so ring
+overwrites need no re-rotation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, mamba2, rwkv6, moe
+from repro.models.config import ModelConfig
+from repro.models.model import Params, _cross_attention, _forward_encoder
+
+Cache = dict
+
+
+# ---------------------------------------------------------------- init
+
+def init_cache(
+    cfg: ModelConfig, batch_size: int, seq_len: int, *, dtype=None
+) -> Cache:
+    """Empty cache sized for a context of ``seq_len`` tokens."""
+    dt = dtype or cfg.activation_dtype
+    b = batch_size
+    fam = cfg.family
+    lc = cfg.effective_cache_len(seq_len)
+    if fam in ("dense", "moe", "vlm"):
+        return {
+            "k": jnp.zeros((cfg.n_layers, b, lc, cfg.n_kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((cfg.n_layers, b, lc, cfg.n_kv_heads, cfg.hd), dt),
+            "slot_pos": jnp.full((lc,), -1, jnp.int32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if fam == "ssm":
+        hN = cfg.rwkv_heads
+        hd = cfg.d_model // hN
+        return {
+            "s": jnp.zeros((cfg.n_layers, b, hN, hd, hd), jnp.float32),
+            "x_tm": jnp.zeros((cfg.n_layers, b, cfg.d_model), dt),
+            "x_cm": jnp.zeros((cfg.n_layers, b, cfg.d_model), dt),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if fam == "hybrid":
+        h = cfg.n_ssm_heads
+        window = cfg.sliding_window or 4096
+        lc = min(window, seq_len)
+        conv_c = cfg.d_inner + 2 * cfg.ssm_state
+        n_super = cfg.n_layers // cfg.attn_every
+        # one KV ring per shared-attention APPLICATION (weights are shared,
+        # the streams are not).
+        return {
+            "ssm": jnp.zeros(
+                (cfg.n_layers, b, h, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32
+            ),
+            "conv": jnp.zeros((cfg.n_layers, b, mamba2.CONV_K - 1, conv_c), dt),
+            "k": jnp.zeros((n_super, b, lc, cfg.n_kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((n_super, b, lc, cfg.n_kv_heads, cfg.hd), dt),
+            "slot_pos": jnp.full((lc,), -1, jnp.int32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if fam == "encdec":
+        # decoder self cache (target side, window-bounded) + cross k/v
+        # (built from the encoder memory at prefill).
+        return {
+            "k": jnp.zeros((cfg.n_layers, b, lc, cfg.n_kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((cfg.n_layers, b, lc, cfg.n_kv_heads, cfg.hd), dt),
+            "slot_pos": jnp.full((lc,), -1, jnp.int32),
+            "pos": jnp.zeros((), jnp.int32),
+            # cross k/v filled by encode(); sized for the source length.
+            "mem_k": None,
+            "mem_v": None,
+        }
+    raise ValueError(fam)
+
+
+def cache_spec(cfg: ModelConfig, batch_size: int, seq_len: int, src_len: int = 0):
+    """ShapeDtypeStruct pytree of the cache (for dry-run lowering)."""
+    def build():
+        c = init_cache(cfg, batch_size, seq_len)
+        if cfg.family == "encdec":
+            dt = cfg.activation_dtype
+            sl = src_len or seq_len
+            c["mem_k"] = jnp.zeros(
+                (cfg.n_layers, batch_size, sl, cfg.n_kv_heads, cfg.hd), dt
+            )
+            c["mem_v"] = jnp.zeros_like(c["mem_k"])
+        return c
+
+    return jax.eval_shape(build)
+
+
+def encode(cfg: ModelConfig, params: Params, cache: Cache, src_embeds: jax.Array) -> Cache:
+    """encdec prefill of the encoder side: build cross-attention k/v."""
+    mem = _forward_encoder(cfg, params, src_embeds.astype(cfg.activation_dtype))
+    dtype = mem.dtype
+
+    def per_layer(layer_p):
+        xp = layer_p["xattn"]
+        mk = jnp.einsum("bsd,dhk->bshk", mem, xp["wk"].astype(dtype))
+        mv = jnp.einsum("bsd,dhk->bshk", mem, xp["wv"].astype(dtype))
+        return mk, mv
+
+    mk, mv = jax.lax.map(per_layer, params["layers"])
+    return {**cache, "mem_k": mk, "mem_v": mv}
+
+
+# ---------------------------------------------------------------- step
+
+def _attn_cache_step(
+    cfg: ModelConfig, p: dict, x: jax.Array, k_cache, v_cache, slot_pos, pos,
+    window: int,
+):
+    """One decode step of a cached self-attention. x: (B, D)."""
+    dtype = x.dtype
+    lc = k_cache.shape[1]
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"].astype(dtype))[:, None]
+    k = jnp.einsum("bd,dhk->bhk", x, p["wk"].astype(dtype))[:, None]
+    v = jnp.einsum("bd,dhk->bhk", x, p["wv"].astype(dtype))[:, None]
+    posf = pos.astype(jnp.float32)[None]
+    q = layers.apply_rope(q, posf, cfg.rope_theta)
+    k = layers.apply_rope(k, posf, cfg.rope_theta)
+    slot = pos % lc
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    new_slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        slot_pos, pos[None], slot, axis=0
+    )
+    o = layers.decode_attention(q, k_cache, v_cache, new_slot_pos)
+    out = jnp.einsum("bqhk,hkd->bd", o, p["wo"].astype(dtype))[:, ...]
+    return out.reshape(x.shape), k_cache, v_cache, new_slot_pos
+
+
+def decode_step(
+    cfg: ModelConfig, params: Params, cache: Cache, tokens: jax.Array
+) -> tuple[jax.Array, Cache]:
+    """One token for every sequence in the batch. tokens: (B,) int32.
+    Returns (logits (B, V) fp32, new cache)."""
+    dtype = cfg.activation_dtype
+    fam = cfg.family
+    x = params["embed"]["table"].astype(dtype)[tokens]  # (B, D)
+    pos = cache["pos"]
+
+    if fam in ("dense", "moe", "vlm"):
+        window = cfg.sliding_window
+        slot_pos = cache["slot_pos"]
+
+        def body(carry, inp):
+            h, sp = carry
+            layer_p, kc, vc = inp
+            a, kc, vc, sp_new = _attn_cache_step(
+                cfg, layer_p["attn"], layers.rmsnorm(layer_p["ln1"], h, cfg.norm_eps),
+                kc, vc, sp, pos, window,
+            )
+            h = h + a
+            y = layers.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+            if fam == "moe":
+                m, _ = moe.moe_apply(
+                    layer_p["moe"], y[:, None, :], top_k=cfg.top_k,
+                    capacity_factor=float(cfg.n_experts),  # no drops at S=1
+                )
+                m = m[:, 0, :]
+            else:
+                m = layers.swiglu(layer_p["mlp"], y[:, None, :])[:, 0, :]
+            return (h + m, sp_new), (kc, vc, sp_new)
+
+        (h, _), (k_new, v_new, sp_all) = jax.lax.scan(
+            body, (x, slot_pos), (params["layers"], cache["k"], cache["v"])
+        )
+        new_cache = {
+            **cache, "k": k_new, "v": v_new,
+            "slot_pos": sp_all[-1], "pos": pos + 1,
+        }
+
+    elif fam == "ssm":
+        def body(h, inp):
+            layer_p, s, x_tm, x_cm = inp
+            a, tm_carry, s_new = rwkv6.time_mix_step(
+                layer_p["tm"], layers.rmsnorm(layer_p["ln1"], h, cfg.norm_eps),
+                x_tm, s, cfg.rwkv_heads,
+            )
+            h = h + a
+            c, cm_carry = rwkv6.channel_mix_apply(
+                layer_p["cm"],
+                layers.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)[:, None, :],
+                x_cm,
+            )
+            return h + c[:, 0, :], (s_new, tm_carry, cm_carry)
+
+        h, (s_new, tm_new, cm_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["s"], cache["x_tm"], cache["x_cm"])
+        )
+        new_cache = {
+            **cache, "s": s_new, "x_tm": tm_new, "x_cm": cm_new, "pos": pos + 1
+        }
+
+    elif fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        shared = params["shared_attn"]
+        window = cfg.sliding_window or 4096
+        resh = lambda t: jax.tree_util.tree_map(
+            lambda a: a.reshape((n_super, cfg.attn_every) + a.shape[1:]), t
+        )
+        stacked = resh(params["layers"])
+        ssm_st = resh(cache["ssm"])
+        conv_st = resh(cache["conv"])
+        sp0 = cache["slot_pos"]
+
+        def super_body(carry, inp):
+            h, sp_prev = carry
+            super_p, ssm_s, conv_s, kc, vc = inp
+
+            def inner(hh, layer_inp):
+                layer_p, s1, c1 = layer_inp
+                a, st = mamba2.mamba2_step(
+                    layer_p["mamba"],
+                    layers.rmsnorm(layer_p["ln"], hh, cfg.norm_eps),
+                    {"ssm": s1, "conv": c1},
+                    d_inner=cfg.d_inner, d_state=cfg.ssm_state,
+                    head_dim=cfg.ssm_head_dim,
+                )
+                return hh + a, (st["ssm"], st["conv"])
+
+            h, (ssm_new, conv_new) = jax.lax.scan(inner, h, (super_p, ssm_s, conv_s))
+            a, kc, vc, sp = _attn_cache_step(
+                cfg, shared["attn"], layers.rmsnorm(shared["ln"], h, cfg.norm_eps),
+                kc, vc, sp0, pos, window,
+            )
+            h = h + a
+            m = layers.swiglu(
+                shared["mlp"], layers.rmsnorm(shared["ln2"], h, cfg.norm_eps)[:, None, :]
+            )
+            return (h + m[:, 0, :], sp), (ssm_new, conv_new, kc, vc)
+
+        (h, sp), (ssm_new, conv_new, k_new, v_new) = jax.lax.scan(
+            super_body, (x, sp0), (stacked, ssm_st, conv_st, cache["k"], cache["v"])
+        )
+        unre = lambda a: a.reshape((cfg.n_layers,) + a.shape[2:])
+        new_cache = {
+            **cache,
+            "ssm": unre(ssm_new), "conv": unre(conv_new),
+            "k": k_new, "v": v_new, "slot_pos": sp, "pos": pos + 1,
+        }
+
+    elif fam == "encdec":
+        slot_pos = cache["slot_pos"]
+
+        def body(carry, inp):
+            h, sp = carry
+            layer_p, kc, vc, mk, mv = inp
+            a, kc, vc, sp_new = _attn_cache_step(
+                cfg, layer_p["attn"], layers.rmsnorm(layer_p["ln1"], h, cfg.norm_eps),
+                kc, vc, sp, pos, cfg.sliding_window,
+            )
+            h = h + a
+            c = _cross_attention(
+                cfg, layer_p["xattn"],
+                layers.rmsnorm(layer_p["ln_x"], h, cfg.norm_eps)[:, None, :],
+                mk, mv,
+            )
+            h = h + c[:, 0, :]
+            m = layers.swiglu(
+                layer_p["mlp"], layers.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)[:, None, :]
+            )
+            return (h + m[:, 0, :], sp_new), (kc, vc, sp_new)
+
+        (h, _), (k_new, v_new, sp_all) = jax.lax.scan(
+            body, (x, slot_pos),
+            (params["layers"], cache["k"], cache["v"], cache["mem_k"], cache["mem_v"]),
+        )
+        new_cache = {
+            **cache, "k": k_new, "v": v_new,
+            "slot_pos": sp_all[-1], "pos": pos + 1,
+        }
+    else:
+        raise ValueError(fam)
+
+    h = layers.rmsnorm(params["final_norm"], h[:, None, :], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = layers.unembed(head, h)[:, 0, :]
+    return logits, new_cache
+
+
+def prefill(
+    cfg: ModelConfig, params: Params, batch: dict, seq_len: int
+) -> tuple[jax.Array, Cache]:
+    """Run the context through the model, build the cache, return last logits.
+
+    For attention families the cache holds the last ``Lc`` positions of the
+    RoPE'd k/v; for SSM/hybrid families the recurrent states are produced by
+    the (chunked) sequence pass. Implemented by replaying the train forward
+    with cache taps — clarity over micro-optimality (the §Perf loop measures
+    the train/decode paths, prefill reuses their kernels).
+    """
+    from repro.models import model as model_mod
+
+    dtype = cfg.activation_dtype
+    fam = cfg.family
+    b = (batch["tokens"] if "tokens" in batch else batch["src_embeds"]).shape[0]
+    cache = init_cache(cfg, b, seq_len)
+    if fam == "encdec":
+        cache = encode(cfg, params, cache, batch["src_embeds"])
+        logits = None
+        # decoder starts empty; first decode_step consumes BOS.
+        bos = jnp.zeros((b,), jnp.int32)
+        logits, cache = decode_step(cfg, params, cache, bos)
+        return logits, cache
+
+    x = layers.embed(params["embed"], batch["tokens"], dtype)
+    if fam == "vlm":
+        vis = batch["vis_embeds"].astype(dtype)
+        vis = jnp.einsum("bnd,de->bne", vis, params["vis_proj"]["w"].astype(dtype))
+        x = jnp.concatenate([vis, x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    lc = cfg.effective_cache_len(seq_len)
+
+    if fam in ("dense", "moe", "vlm"):
+        window = cfg.sliding_window
+
+        def body(h, inp):
+            layer_p = inp
+            y = layers.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+            a, k, v = model_mod._self_attention(
+                cfg, layer_p["attn"], y, causal=True, positions=positions
+            )
+            h = h + a
+            z = layers.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+            if fam == "moe":
+                m, _ = moe.moe_apply(layer_p["moe"], z, top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor)
+            else:
+                m = layers.swiglu(layer_p["mlp"], z)
+            # ring-write the last min(lc, s) positions
+            m_keep = min(lc, s)
+            k_last, v_last = k[:, -m_keep:], v[:, -m_keep:]
+            slots = (s - m_keep + jnp.arange(m_keep)) % lc
+            kc = jnp.zeros((k.shape[0], lc) + k.shape[2:], k.dtype).at[:, slots].set(k_last)
+            vc = jnp.zeros_like(kc).at[:, slots].set(v_last)
+            return h + m, (kc, vc)
+
+        h, (k_new, v_new) = jax.lax.scan(body, x, params["layers"])
+        m_keep = min(lc, s)
+        slot_pos = jnp.full((lc,), -1, jnp.int32).at[
+            (s - m_keep + jnp.arange(m_keep)) % lc
+        ].set(s - m_keep + jnp.arange(m_keep))
+        cache = {**cache, "k": k_new, "v": v_new, "slot_pos": slot_pos,
+                 "pos": jnp.asarray(s, jnp.int32)}
+    elif fam == "ssm":
+        hN = cfg.rwkv_heads
+        hd = cfg.d_model // hN
+
+        def body(h, layer_p):
+            x_prev = jnp.zeros((b, cfg.d_model), h.dtype)
+            s0 = jnp.zeros((b, hN, hd, hd), jnp.float32)
+            h2, tm_c, cm_c, s_new = model_mod._rwkv_block(
+                cfg, layer_p, h, x_prev, x_prev, s0
+            )
+            return h2, (s_new, tm_c, cm_c)
+
+        h, (s_new, tm_c, cm_c) = jax.lax.scan(body, x, params["layers"])
+        cache = {**cache, "s": s_new, "x_tm": tm_c, "x_cm": cm_c,
+                 "pos": jnp.asarray(s, jnp.int32)}
+    elif fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        shared = params["shared_attn"]
+        window = cfg.sliding_window or 4096
+        lc = min(window, seq_len)
+        m_keep = min(lc, s)
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_super, cfg.attn_every) + a.shape[1:]),
+            params["layers"],
+        )
+
+        def super_body(h, super_p):
+            def inner(hh, layer_p):
+                hh2, st = model_mod._mamba_block(cfg, layer_p, hh)
+                return hh2, (st["ssm"], st["conv"])
+
+            h, (ssm_st, conv_st) = jax.lax.scan(inner, h, super_p)
+            a, k, v = model_mod._self_attention(
+                cfg, shared["attn"], layers.rmsnorm(shared["ln"], h, cfg.norm_eps),
+                causal=True, positions=positions, window_override=window,
+            )
+            h = h + a
+            m = layers.swiglu(
+                shared["mlp"], layers.rmsnorm(shared["ln2"], h, cfg.norm_eps)
+            )
+            return h + m, (ssm_st, conv_st, k[:, -m_keep:], v[:, -m_keep:])
+
+        h, (ssm_all, conv_all, k_last, v_last) = jax.lax.scan(
+            super_body, x, stacked
+        )
+        # one ring per shared-attention application (n_super streams)
+        slots = (s - m_keep + jnp.arange(m_keep)) % lc
+        kc = jnp.zeros((k_last.shape[0], b, lc) + k_last.shape[3:], k_last.dtype)
+        kc = kc.at[:, :, slots].set(k_last)
+        vc = jnp.zeros_like(kc).at[:, :, slots].set(v_last)
+        slot_pos = jnp.full((lc,), -1, jnp.int32).at[slots].set(
+            s - m_keep + jnp.arange(m_keep)
+        )
+        unre = lambda a: a.reshape((cfg.n_layers,) + a.shape[2:])
+        cache = {
+            **cache,
+            "ssm": unre(ssm_all), "conv": unre(conv_all),
+            "k": kc, "v": vc, "slot_pos": slot_pos,
+            "pos": jnp.asarray(s, jnp.int32),
+        }
+    else:
+        raise NotImplementedError(f"prefill for {fam} uses decode_step replay")
+
+    h = layers.rmsnorm(params["final_norm"], h[:, -1:, :], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return layers.unembed(head, h)[:, 0, :], cache

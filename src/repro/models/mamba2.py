@@ -1,0 +1,188 @@
+"""Mamba2 (SSD) blocks for the zamba2 hybrid (arXiv:2411.15242).
+
+State-space duality form: per head h (head dim P, state dim N)
+  a_t = exp(-softplus(dt_t) * exp(A_log_h))            (scalar decay)
+  S_t = a_t S_{t-1} + softplus(dt_t) * B_t (x) x_t     (S in R^{N x P})
+  y_t = C_t . S_t + D_h * x_t
+
+Executed chunk-parallel (the SSD algorithm): intra-chunk is a masked
+(C x C) decay-weighted matmul (MXU-friendly), inter-chunk is a scan over
+chunk states. Scalar-per-head decay keeps the pairwise decay matrix
+L[t,j] = exp(cum_t - cum_j) exactly computable in fp32 (exponent <= 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+CONV_K = 4  # depthwise causal conv width
+
+
+def mamba2_params(key: jax.Array, d: int, d_inner: int, d_state: int,
+                  head_dim: int, n_layers: int = 1) -> dict:
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "w_in": layers.dense_init(
+            ks[0], (d, 2 * d_inner + 2 * d_state + n_heads)
+        ),
+        "conv": layers.dense_init(ks[1], (CONV_K, d_inner + 2 * d_state), scale=0.5),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.full((n_heads,), -2.0, jnp.float32),  # softplus ~ 0.12
+        "w_out": layers.dense_init(
+            ks[2], (d_inner, d), scale=0.02 / max(1.0, (2 * n_layers) ** 0.5)
+        ),
+        "norm": layers.rmsnorm_params(d_inner),
+    }
+
+
+def _split_proj(proj: jax.Array, d_inner: int, d_state: int):
+    z = proj[..., :d_inner]
+    x = proj[..., d_inner : 2 * d_inner]
+    b = proj[..., 2 * d_inner : 2 * d_inner + d_state]
+    c = proj[..., 2 * d_inner + d_state : 2 * d_inner + 2 * d_state]
+    dt = proj[..., 2 * d_inner + 2 * d_state :]
+    return z, x, b, c, dt
+
+
+def causal_conv(x: jax.Array, kernel: jax.Array, carry: jax.Array | None = None):
+    """Depthwise causal conv. x: (B,T,C); kernel: (K,C); carry: (B,K-1,C).
+    Returns (y, new_carry)."""
+    k = kernel.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    ker = kernel.astype(x.dtype)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * ker[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(y), xp[:, -(k - 1) :, :]
+
+
+def ssd_chunked(
+    x: jax.Array,     # (B,T,H,P)
+    dt: jax.Array,    # (B,T,H)  softplus'd, fp32
+    a_log: jax.Array, # (H,)
+    b_in: jax.Array,  # (B,T,N)
+    c_in: jax.Array,  # (B,T,N)
+    s0: jax.Array,    # (B,H,N,P) fp32
+    chunk: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    bsz, t, h, p = x.shape
+    n = b_in.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    xf = x.astype(jnp.float32)
+    bf = b_in.astype(jnp.float32)
+    cf = c_in.astype(jnp.float32)
+    loga = -dt * jnp.exp(a_log)[None, None, :]                 # (B,T,H) <= 0
+
+    resh = lambda z, last: z.reshape((bsz, nc, chunk) + last)
+    xc = resh(xf, (h, p))
+    dtc = resh(dt, (h,))
+    bc = resh(bf, (n,))
+    cc = resh(cf, (n,))
+    lac = resh(loga, (h,))
+    cum = jnp.cumsum(lac, axis=2)                              # (B,NC,C,H)
+
+    # --- intra-chunk: y[t] = sum_{j<=t} (C_t.B_j) e^{cum_t-cum_j} dt_j x_j
+    l_mat = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,NC,t,j,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # Mask INSIDE the exp: for j > t the exponent is positive-large, and
+    # exp->inf then *0 would poison the backward with inf*0 = NaN.
+    l_mat = jnp.exp(jnp.where(tri[None, None, :, :, None], l_mat, -1e30))
+    cb = jnp.einsum("bctn,bcjn->bctj", cc, bc)
+    scores = cb[..., None] * l_mat * dtc[:, :, None, :, :]     # (B,NC,t,j,H)
+    y_intra = jnp.einsum("bctjh,bcjhp->bcthp", scores, xc)
+
+    # --- chunk state writes: S_out = e^{cum_last} S_in + sum_j e^{cum_last-cum_j} dt_j B_j x_j
+    dec_k = jnp.exp(cum[:, :, -1:, :] - cum)                   # (B,NC,C,H)
+    kv = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bc, dec_k * dtc, xc)
+    full = jnp.exp(cum[:, :, -1, :])                           # (B,NC,H)
+
+    def step(s, inp):
+        kvc, fd = inp
+        return fd[..., None, None] * s + kvc, s
+
+    s_final, s_in = jax.lax.scan(
+        step, s0, (jnp.moveaxis(kv, 1, 0), jnp.moveaxis(full, 1, 0))
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)                            # (B,NC,H,N,P)
+    y_state = jnp.einsum(
+        "bctn,bcth,bchnp->bcthp", cc, jnp.exp(cum), s_in
+    )
+    y = (y_intra + y_state).reshape(bsz, t, h, p)
+    return y.astype(x.dtype), s_final
+
+
+def ssd_sequential(x, dt, a_log, b_in, c_in, s0):
+    """Oracle: lax.scan over time."""
+    loga = -dt * jnp.exp(a_log)[None, None, :]
+
+    def step(s, inp):
+        xt, dtt, lat, bt, ct = inp
+        a = jnp.exp(lat)                                       # (B,H)
+        kv = jnp.einsum("bn,bh,bhp->bhnp", bt, dtt, xt)
+        s_new = a[..., None, None] * s + kv
+        y = jnp.einsum("bn,bhnp->bhp", ct, s_new)
+        return s_new, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(loga, 1, 0),
+        jnp.moveaxis(b_in.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c_in.astype(jnp.float32), 1, 0),
+    )
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s_final
+
+
+def mamba2_apply(
+    params: dict, x: jax.Array, *, d_inner: int, d_state: int, head_dim: int,
+    state: dict | None = None, chunk: int = 128, chunked: bool = True,
+) -> tuple[jax.Array, dict]:
+    """Full-sequence Mamba2 block. state carries (ssm, conv) for streaming."""
+    bsz, t, d = x.shape
+    h = d_inner // head_dim
+    dtype = x.dtype
+    proj = jnp.einsum("btd,de->bte", x, params["w_in"].astype(dtype))
+    z, xi, b_in, c_in, dt = _split_proj(proj, d_inner, d_state)
+
+    conv_in = jnp.concatenate([xi, b_in, c_in], axis=-1)
+    conv_carry = None if state is None else state["conv"]
+    conv_out, conv_carry = causal_conv(conv_in, params["conv"], conv_carry)
+    xi = conv_out[..., :d_inner]
+    b_in = conv_out[..., d_inner : d_inner + d_state]
+    c_in = conv_out[..., d_inner + d_state :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    xh = xi.reshape(bsz, t, h, head_dim)
+    s0 = (
+        jnp.zeros((bsz, h, d_state, head_dim), jnp.float32)
+        if state is None
+        else state["ssm"]
+    )
+    if chunked and t % chunk == 0 and t > 1:
+        y, s_final = ssd_chunked(xh, dt, params["a_log"], b_in, c_in, s0, chunk)
+    else:
+        y, s_final = ssd_sequential(xh, dt, params["a_log"], b_in, c_in, s0)
+    y = y + params["d_skip"].astype(dtype)[None, None, :, None] * xh
+    y = y.reshape(bsz, t, d_inner)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bte,ed->btd", y, params["w_out"].astype(dtype))
+    return out, {"ssm": s_final, "conv": conv_carry}
+
+
+def mamba2_step(params: dict, x: jax.Array, state: dict, *,
+                d_inner: int, d_state: int, head_dim: int) -> tuple[jax.Array, dict]:
+    """Single-token decode step. x: (B, D)."""
+    out, new_state = mamba2_apply(
+        params, x[:, None, :], d_inner=d_inner, d_state=d_state,
+        head_dim=head_dim, state=state, chunked=False,
+    )
+    return out[:, 0, :], new_state

@@ -1,0 +1,150 @@
+"""Mixture-of-Experts layer (grok-1 style 8e top-2, granite 32e top-8).
+
+Classic GShard/Switch capacity-based dispatch with static shapes
+(TPU-friendly: the dispatch/combine are einsums over a one-hot
+position-in-expert tensor, so everything lowers to matmuls that the MXU
+likes). Expert weights carry a leading E axis that the launcher shards
+over the ``model`` mesh axis (expert parallelism); the per-device capacity
+slice keeps the all-to-all bounded.
+
+Aux losses: load-balancing (Switch eq. 4) + router z-loss, both returned
+so the trainer can fold them into the objective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def moe_params(key: jax.Array, d: int, f: int, n_experts: int, n_layers: int = 1) -> dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": layers.dense_init(kr, (d, n_experts)),
+        "wg": layers.dense_init(kg, (n_experts, d, f)),
+        "wu": layers.dense_init(ku, (n_experts, d, f)),
+        "wd": layers.dense_init(kd, (n_experts, f, d), scale=0.02 / max(1.0, (2 * n_layers) ** 0.5)),
+    }
+
+
+def moe_apply(
+    params: dict,
+    x: jax.Array,          # (B, S, D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    route_chunk: int = 512,
+) -> tuple[jax.Array, dict]:
+    """Capacity-based top-k MoE. For long sequences the routing/dispatch is
+    scanned over chunks of ``route_chunk`` tokens: the one-hot dispatch
+    tensor is O(chunk * E * C_chunk) instead of O(S * E * C) — the full-
+    sequence variant put a ~160 GB temp on each device for granite
+    (32e/top-8) at 4k x 16 local batch. Per-chunk capacity keeps drop
+    semantics local, which matches production routers (e.g. GShard's
+    grouped dispatch)."""
+    b, s, d = x.shape
+    if s > route_chunk and s % route_chunk == 0:
+        nc = s // route_chunk
+        xc = x.reshape(b, nc, route_chunk, d)
+
+        def body(carry, xcnk):
+            out, aux = _moe_apply_dense(
+                params, xcnk, top_k=top_k, capacity_factor=capacity_factor
+            )
+            return carry, (out, aux)
+
+        xs = jnp.moveaxis(xc, 1, 0)                     # (nc, B, chunk, D)
+        _, (outs, auxs) = jax.lax.scan(body, 0, xs)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)
+        aux = {k: jnp.mean(v) for k, v in auxs.items()}
+        return out, aux
+    return _moe_apply_dense(params, x, top_k=top_k, capacity_factor=capacity_factor)
+
+
+def _moe_apply_dense(
+    params: dict,
+    x: jax.Array,          # (B, S, D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> tuple[jax.Array, dict]:
+    b, s, d = x.shape
+    e = params["router"].shape[-1]
+    dtype = x.dtype
+
+    logits = jnp.einsum(
+        "bsd,de->bse", x, params["router"].astype(dtype),
+        preferred_element_type=jnp.float32,
+    )
+    probs = jax.nn.softmax(logits, axis=-1)                        # (B,S,E) fp32
+
+    # --- top-k routing with renormalized gates -------------------------
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)              # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(int(capacity_factor * s * top_k / e), 1)
+
+    # one-hot over experts per routing slot: (B,S,K,E)
+    sel = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)
+    # position of each (token, slot) within its expert queue, by scan order
+    # over (s, k): cumulative count of prior assignments to the same expert.
+    flat_sel = sel.reshape(b, s * top_k, e)
+    pos_in_expert = (jnp.cumsum(flat_sel, axis=1) - flat_sel)      # (B,S*K,E)
+    pos_in_expert = jnp.einsum("bte,bte->bt", pos_in_expert, flat_sel)
+    keep = pos_in_expert < capacity                                # drop overflow
+    pos_onehot = jax.nn.one_hot(pos_in_expert.astype(jnp.int32), capacity, dtype=jnp.float32)
+    disp = flat_sel[..., None] * pos_onehot[:, :, None, :]         # (B,S*K,E,C)
+    disp = disp * keep[:, :, None, None]
+    gates_flat = gate_vals.reshape(b, s * top_k)
+    combine = disp * gates_flat[:, :, None, None]                  # weights
+
+    disp_tokens = disp.reshape(b, s, top_k, e, capacity).sum(2)    # (B,S,E,C)
+    combine_tok = combine.reshape(b, s, top_k, e, capacity).sum(2)
+
+    # --- expert computation --------------------------------------------
+    xe = jnp.einsum("bsec,bsd->becd", disp_tokens.astype(dtype), x)  # (B,E,C,D)
+    g = jnp.einsum("becd,edf->becf", xe, params["wg"].astype(dtype))
+    u = jnp.einsum("becd,edf->becf", xe, params["wu"].astype(dtype))
+    y = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, params["wd"].astype(dtype))
+    out = jnp.einsum("bsec,becd->bsd", combine_tok.astype(dtype), y)
+
+    # --- aux losses ------------------------------------------------------
+    # load balance: E * sum_e (fraction of tokens to e) * (mean router prob e)
+    frac = sel.sum(2).mean(axis=(0, 1))        # top-k counts per expert / S
+    mean_prob = probs.mean(axis=(0, 1))
+    lb_loss = e * jnp.sum(frac / top_k * mean_prob)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - keep.mean()
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "dropped_frac": dropped}
+    return out, aux
+
+
+def moe_apply_dense_fallback(params: dict, x: jax.Array, *, top_k: int) -> jax.Array:
+    """Oracle: run every expert on every token, combine with top-k gates.
+    O(E/ top_k) more FLOPs; used in tests to validate the dispatch path
+    (equal when capacity is unbounded)."""
+    dtype = x.dtype
+    logits = jnp.einsum(
+        "bsd,de->bse", x, params["router"].astype(dtype),
+        preferred_element_type=jnp.float32,
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    e = params["router"].shape[-1]
+    gates = jnp.zeros_like(probs)
+    gates = jnp.take_along_axis(
+        jnp.zeros_like(probs), gate_idx, axis=-1
+    )  # placeholder to keep shape clear
+    gates = jax.vmap(
+        lambda p, i, v: p.at[i].set(v), in_axes=(0, 0, 0)
+    )(
+        jnp.zeros((x.shape[0] * x.shape[1], e), jnp.float32),
+        gate_idx.reshape(-1, top_k),
+        gate_vals.reshape(-1, top_k),
+    ).reshape(probs.shape)
+    g = jnp.einsum("bsd,edf->bsef", x, params["wg"].astype(dtype))
+    u = jnp.einsum("bsd,edf->bsef", x, params["wu"].astype(dtype))
+    y = jnp.einsum("bsef,efd->bsed", jax.nn.silu(g) * u, params["wd"].astype(dtype))
+    return jnp.einsum("bse,bsed->bsd", gates.astype(dtype), y)

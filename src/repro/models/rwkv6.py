@@ -1,0 +1,264 @@
+"""RWKV6 "Finch" blocks (arXiv:2404.05892): attention-free time mix with
+data-dependent per-channel decay + squared-ReLU channel mix.
+
+State per layer: the WKV matrix S in R^{H x K x V} plus the previous token
+activations for the two token-shifts — O(1) in sequence length, which is
+why rwkv6-7b runs ``long_500k`` natively.
+
+Time-mix recurrence per head (K = V = head_dim):
+  w_t = exp(-exp(w0 + tanh(x_w A) B))          (data-dependent decay)
+  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+  y_t = r_t (diag(u) k_t^T v_t + S_{t-1})
+
+Two execution paths:
+  * ``wkv_sequential`` — lax.scan over time (exact oracle);
+  * ``wkv_chunked``    — chunk-parallel form (intra-chunk matmuls via the
+    exp-cumsum factorization + inter-chunk state scan). This is the
+    TPU-native adaptation: the MXU sees (chunk x chunk) matmuls instead of
+    a length-S serial chain.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.activations import shard_act
+from repro.models import layers
+
+
+def time_mix_params(key: jax.Array, d: int, n_heads: int, n_layers: int = 1) -> dict:
+    hd = d // n_heads
+    ks = jax.random.split(key, 8)
+    lora = max(32, d // 64)
+    return {
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "wr": layers.dense_init(ks[0], (d, d)),
+        "wk": layers.dense_init(ks[1], (d, d)),
+        "wv": layers.dense_init(ks[2], (d, d)),
+        "wg": layers.dense_init(ks[3], (d, d)),
+        "wo": layers.dense_init(ks[4], (d, d), scale=0.02 / max(1.0, (2 * n_layers) ** 0.5)),
+        # data-dependent decay LoRA: w0 + tanh(x A) B
+        "w0": jnp.full((d,), -6.0, jnp.float32),  # exp(-exp(-6)) ~ slow decay
+        "wa": layers.dense_init(ks[5], (d, lora)),
+        "wb": layers.dense_init(ks[6], (lora, d), scale=0.1),
+        "u": layers.dense_init(ks[7], (n_heads, hd), scale=0.5),  # bonus
+        # RWKV6 uses GroupNorm(n_heads) on the WKV output: per-head LN with
+        # per-channel affine. Head-local, so it keeps the sharded-heads
+        # layout intact (no cross-device resharding before the out proj).
+        "ln": layers.layernorm_params(d),
+    }
+
+
+def groupnorm_heads(params: dict, y: jax.Array, eps: float = 64e-5) -> jax.Array:
+    """Per-head layernorm on (B, T, H, N) with (H*N,)-shaped affine."""
+    b, t, h, n = y.shape
+    dtype = y.dtype
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.mean((yf - mu) ** 2, axis=-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].reshape(h, n)
+    bias = params["bias"].reshape(h, n)
+    return (yn * scale + bias).astype(dtype)
+
+
+def channel_mix_params(key: jax.Array, d: int, f: int, n_layers: int = 1) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk": layers.dense_init(k1, (d, f)),
+        "wv": layers.dense_init(k2, (f, d), scale=0.02 / max(1.0, (2 * n_layers) ** 0.5)),
+        "wr": layers.dense_init(k3, (d, d)),
+    }
+
+
+def _shift(x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """Token shift: prepend the carried last token, drop the final one.
+    x: (B, T, D); x_prev: (B, D) -> shifted (B, T, D)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x: jax.Array, x_shift: jax.Array, mu: jax.Array) -> jax.Array:
+    return x + (x_shift - x) * mu.astype(x.dtype)
+
+
+def _rkvwg(params: dict, x: jax.Array, x_prev: jax.Array, n_heads: int):
+    """Project the five mixed streams. Returns per-head r,k,v (B,T,H,hd),
+    decay w (B,T,H,hd) in (0,1), gate g (B,T,D), and the new shift carry."""
+    b, t, d = x.shape
+    hd = d // n_heads
+    dtype = x.dtype
+    xs = _shift(x, x_prev)
+    xr = _mix(x, xs, params["mu_r"])
+    xk = _mix(x, xs, params["mu_k"])
+    xv = _mix(x, xs, params["mu_v"])
+    xw = _mix(x, xs, params["mu_w"])
+    xg = _mix(x, xs, params["mu_g"])
+    r = jnp.einsum("btd,de->bte", xr, params["wr"].astype(dtype))
+    k = jnp.einsum("btd,de->bte", xk, params["wk"].astype(dtype))
+    v = jnp.einsum("btd,de->bte", xv, params["wv"].astype(dtype))
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, params["wg"].astype(dtype)))
+    # data-dependent decay, fp32 for the double-exp
+    lora = jnp.einsum(
+        "btd,dl->btl", xw.astype(jnp.float32), params["wa"]
+    )
+    dd = jnp.einsum("btl,ld->btd", jnp.tanh(lora), params["wb"])
+    w = jnp.exp(-jnp.exp(params["w0"] + dd))  # (B,T,D) in (0,1), fp32
+    hsplit = lambda z: z.reshape(b, t, n_heads, hd)
+    return (
+        hsplit(r), hsplit(k), hsplit(v),
+        hsplit(w), g, x[:, -1, :],
+    )
+
+
+def wkv_sequential(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+    u: jax.Array, s0: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact recurrence via lax.scan over time.
+
+    r,k,v: (B,T,H,N) activation dtype; w: (B,T,H,N) fp32 decays;
+    u: (H,N); s0: (B,H,N,N) fp32. Returns y (B,T,H,N), s_T.
+    """
+    rf, kf, vf = (z.astype(jnp.float32) for z in (r, k, v))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,N) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., None] * s + kv
+        return s_new, yt
+
+    xs = tuple(jnp.moveaxis(z, 1, 0) for z in (rf, kf, vf, w))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_final
+
+
+def wkv_chunked(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+    u: jax.Array, s0: jax.Array, chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunk-parallel WKV: inside a chunk of length C the contribution of
+    key j to query t (j < t) carries decay prod_{s=j+1}^{t} w_s / w_... —
+    factorized as exp(cum_t - cum_{j+1}) with cum the per-channel log-decay
+    cumsum, so the intra-chunk part is a (C x C) masked matmul. The carry
+    between chunks is the usual state recurrence at chunk granularity.
+    fp32 throughout (the exponentials are re-centred per chunk by
+    construction since cum starts at 0 each chunk).
+    """
+    b, t, h, n = r.shape
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    rf, kf, vf = (z.astype(jnp.float32) for z in (r, k, v))
+    logw = jnp.log(jnp.clip(w, 1e-38, 1.0))
+    # Overflow guard: the factorization uses exp(-cum) which blows up when
+    # the per-chunk accumulated decay exceeds ~88 nats. Clamp the per-step
+    # log-decay so |cum| <= 80 within a chunk; at init (and for trained
+    # RWKV checkpoints) log w ~ -2.5e-3, three orders below the clamp.
+    logw = jnp.maximum(logw, -80.0 / chunk)
+    resh = lambda z: shard_act(z.reshape(b, nc, chunk, h, n), "h3")
+    rc, kc, vc, lwc = resh(rf), resh(kf), resh(vf), resh(logw)
+
+    # cum[t] = sum_{s<=t} log w_s within the chunk  (inclusive)
+    cum = jnp.cumsum(lwc, axis=2)                                  # (B,NC,C,H,N)
+    # decay from chunk start to just before t:  exp(cum[t] - lw[t])
+    dec_q = jnp.exp(cum - lwc)        # queries see state through t-1
+    dec_k = jnp.exp(cum[:, :, -1:, :, :] - cum)  # keys decay to chunk end
+    r_in = rc * dec_q                  # queries pre-scaled for state read
+    k_out = kc * dec_k                 # keys pre-scaled for state write
+
+    # intra-chunk pairwise decays: A[t,j] = exp(cum[t-?]...) for j < t:
+    #   contribution decay = prod_{s=j+1}^{t-1}... with the "u bonus" on the
+    #   diagonal handled separately. Using qt = r * exp(cum_t - lw_t) and
+    #   kj = k * exp(-cum_j) gives qt . kj = r.k * exp(cum_{t-1} - cum_j)
+    #   = r.k * prod_{s=j+1}^{t-1} w_s   (strictly lower triangular).
+    q_intra = rc * jnp.exp(cum - lwc)
+    k_intra = kc * jnp.exp(-cum)
+    scores = shard_act(
+        jnp.einsum("bcthn,bcjhn->bchtj", q_intra, k_intra), "h2"
+    )
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+    scores = scores * tri[None, None, None]
+    diag = jnp.einsum("bcthn,bcthn->bcth", rc * u[None, None, None], kc)
+    y_intra = shard_act(jnp.einsum("bchtj,bcjhn->bcthn", scores, vc), "h3")
+    y_intra = y_intra + diag[..., None] * vc
+
+    # inter-chunk: scan chunk states
+    kv_chunk = shard_act(
+        jnp.einsum("bcjhk,bcjhv->bchkv", k_out, vc), "h2"
+    )                                                              # (B,NC,H,N,N)
+    full_dec = jnp.exp(cum[:, :, -1, :, :])                        # (B,NC,H,N)
+
+    def chunk_step(s, inp):
+        kvc, fd = inp
+        s_new = fd[..., None] * s + kvc
+        return s_new, s  # emit the state *entering* the chunk
+
+    s_final, s_in = jax.lax.scan(
+        chunk_step,
+        s0,
+        (jnp.moveaxis(kv_chunk, 1, 0), jnp.moveaxis(full_dec, 1, 0)),
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)                                # (B,NC,H,N,N)
+    y_state = shard_act(jnp.einsum("bcthk,bchkv->bcthv", r_in, s_in), "h3")
+    y = (y_intra + y_state).reshape(b, t, h, n)
+    return shard_act(y, "h2").astype(r.dtype), s_final
+
+
+def wkv_step(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+    u: jax.Array, s: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token decode step. r,k,v,w: (B,H,N); s: (B,H,N,N) fp32."""
+    rf, kf, vf = (z.astype(jnp.float32) for z in (r, k, v))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    y = jnp.einsum("bhk,bhkv->bhv", rf, s + u[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    return y.astype(r.dtype), s_new
+
+
+def time_mix_apply(
+    params: dict, x: jax.Array, x_prev: jax.Array, s0: jax.Array,
+    n_heads: int, *, chunked: bool = True, chunk: int = 64,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full sequence time-mix. Returns (out, new_x_prev, new_state)."""
+    b, t, d = x.shape
+    r, k, v, w, g, carry = _rkvwg(params, x, x_prev, n_heads)
+    u = params["u"].astype(jnp.float32)
+    if chunked and t % chunk == 0 and t > 1:
+        y, s_final = wkv_chunked(r, k, v, w, u, s0, chunk=chunk)
+    else:
+        y, s_final = wkv_sequential(r, k, v, w, u, s0)
+    y = groupnorm_heads(params["ln"], y)          # head-local norm
+    y = y.reshape(b, t, d)
+    out = jnp.einsum("btd,de->bte", y * g, params["wo"].astype(x.dtype))
+    return out, carry, s_final
+
+
+def time_mix_step(
+    params: dict, x: jax.Array, x_prev: jax.Array, s: jax.Array, n_heads: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode. x: (B, D)."""
+    out, carry, s_new = time_mix_apply(
+        params, x[:, None, :], x_prev, s, n_heads, chunked=False
+    )
+    return out[:, 0, :], carry, s_new
+
+
+def channel_mix_apply(
+    params: dict, x: jax.Array, x_prev: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    dtype = x.dtype
+    xs = _shift(x, x_prev)
+    xk = _mix(x, xs, params["mu_k"])
+    xr = _mix(x, xs, params["mu_r"])
+    k = jnp.einsum("btd,df->btf", xk, params["wk"].astype(dtype))
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("btf,fd->btd", k, params["wv"].astype(dtype))
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, params["wr"].astype(dtype)))
+    return r * v, x[:, -1, :]

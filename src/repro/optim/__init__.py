@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    sgd,
+)

@@ -1,0 +1,104 @@
+"""Pure-JAX pytree optimizers (no optax dependency offline).
+
+Each optimizer is an ``Optimizer(init, update)`` pair:
+  state = opt.init(params)
+  updates, state = opt.update(grads, state, params)
+  params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], tuple[Pytree, Pytree]]
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        del params
+        if momentum == 0.0:
+            ups = jax.tree_util.tree_map(lambda g: -lr * g.astype(jnp.float32), grads)
+            return ups, {"step": state["step"] + 1}
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads
+        )
+        ups = jax.tree_util.tree_map(lambda m: -lr * m, mu)
+        return ups, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree_util.tree_map(z, params),
+            "nu": jax.tree_util.tree_map(z, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["mu"], grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads,
+        )
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(m, v, p):
+            u = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u
+
+        ups = jax.tree_util.tree_map(upd, mu, nu, params)
+        return ups, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, 0.0)
+
+
+def adamw(
+    lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay)

@@ -1,0 +1,14 @@
+from repro.wireless.channel import ChannelModel, ChannelParams
+from repro.wireless.energy import comm_energy, comm_latency, comp_energy, comp_latency
+from repro.wireless.system import FEMNIST_SYSTEM, CIFAR10_SYSTEM
+
+__all__ = [
+    "ChannelModel",
+    "ChannelParams",
+    "comm_energy",
+    "comm_latency",
+    "comp_energy",
+    "comp_latency",
+    "FEMNIST_SYSTEM",
+    "CIFAR10_SYSTEM",
+]

@@ -1,0 +1,16 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device; the
+# 512-device XLA flag belongs to the dry-run subprocesses ONLY.
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), (
+    "run pytest without the dry-run XLA_FLAGS"
+)
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro",
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")

@@ -1,0 +1,64 @@
+"""Analytic FLOP/byte models + roofline table machinery."""
+import math
+
+import pytest
+
+from repro.configs import get_config, long_context_variant
+from repro.launch import analytic
+from repro.models.config import INPUT_SHAPES
+
+
+def test_train_flops_tracks_6nd_dense():
+    cfg = get_config("llama3_8b")
+    shape = INPUT_SHAPES["train_4k"]
+    fl = analytic.train_flops(cfg, shape)
+    tokens = shape.global_batch * shape.seq_len
+    six_nd = 6.0 * cfg.param_count() * tokens
+    # remat adds ~1/3; attention adds a few percent at 4k
+    assert 0.9 * six_nd < fl < 2.2 * six_nd
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("grok_1_314b")
+    shape = INPUT_SHAPES["train_4k"]
+    fl = analytic.train_flops(cfg, shape)
+    tokens = shape.global_batch * shape.seq_len
+    assert fl < 6.0 * cfg.param_count() * tokens  # far below total-N
+    assert fl > 6.0 * cfg.active_param_count() * tokens * 0.9
+
+
+def test_decode_flops_linear_in_batch():
+    cfg = get_config("yi_6b")
+    d32 = analytic.decode_flops(cfg, INPUT_SHAPES["decode_32k"])
+    per_tok = d32 / INPUT_SHAPES["decode_32k"].global_batch
+    assert per_tok > 2.0 * cfg.active_param_count() * 0.9
+
+
+def test_long_context_variant_bounds_cache():
+    cfg = get_config("llama3_8b")
+    assert cfg.effective_cache_len(524_288) == 524_288
+    win = long_context_variant(cfg)
+    assert win.effective_cache_len(524_288) == 8192
+    # natively windowed / recurrent archs unchanged
+    sc = get_config("starcoder2_7b")
+    assert long_context_variant(sc).sliding_window == 4096
+    rw = get_config("rwkv6_7b")
+    assert long_context_variant(rw) is rw
+
+
+def test_decode_bytes_dominated_by_params_and_cache():
+    cfg = get_config("phi3_medium_14b")
+    b = analytic.decode_bytes(cfg, INPUT_SHAPES["decode_32k"])
+    n_par = 2.0 * cfg.active_param_count()
+    assert b > n_par  # params + cache
+
+
+def test_analytic_record_per_device_split():
+    cfg = get_config("yi_6b")
+    rec = analytic.analytic_record(
+        cfg, INPUT_SHAPES["train_4k"], "train", n_chips=256, dp_size=16
+    )
+    assert rec["analytic_flops_per_device"] * 256 == pytest.approx(
+        rec["model_flops_total"]
+    )
+    assert rec["analytic_bytes_per_device"] > 0

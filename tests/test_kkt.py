@@ -1,0 +1,131 @@
+"""KKT closed form (eq. 41/42): optimality vs grid search + case coverage."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kkt
+
+
+def make_env(**kw) -> kkt.ClientEnv:
+    base = dict(
+        v=1.2e8, w=0.1, d_size=1200.0, z=246590, theta_max=0.5,
+        lambda2=50.0, eps2=2.0, v_weight=100.0, p=0.2, alpha=1e-26,
+        gamma=1000.0, tau_e=2, t_max=0.02, f_min=2e8, f_max=1e9,
+        lipschitz=1.0,
+    )
+    base.update(kw)
+    return kkt.ClientEnv(**base)
+
+
+def grid_best(env: kkt.ClientEnv, nq: int = 2000) -> tuple[float, float, float]:
+    """Fine continuous grid over q with the optimal latency-tight f."""
+    qmax = kkt.q_max_feasible(env)
+    best = (math.nan, math.nan, math.inf)
+    for qv in np.linspace(1.0, max(qmax, 1.0), nq):
+        f = kkt.optimal_frequency(env, float(qv))
+        if not (f <= env.f_max):
+            continue
+        j = kkt.j3(env, f, float(qv))
+        if j < best[2]:
+            best = (float(qv), f, j)
+    return best
+
+
+@pytest.mark.parametrize("lam2,tmax_model,d", [
+    (50.0, 0.5, 1200.0),    # typical mid-training
+    (0.0, 0.5, 1200.0),     # empty queue -> Case 1 (q = 1)
+    (500.0, 1.0, 400.0),    # heavy queue, small data
+    (120.0, 0.2, 2000.0),   # large dataset
+])
+def test_closed_form_matches_grid(lam2, tmax_model, d):
+    env = make_env(lambda2=lam2, theta_max=tmax_model, d_size=d)
+    q_hat, f_hat, case = kkt.solve_continuous(env)
+    gq, gf, gj = grid_best(env)
+    j_closed = kkt.j3(env, f_hat, q_hat)
+    assert j_closed <= gj + abs(gj) * 1e-5 + 1e-9, (case, q_hat, gq)
+
+
+def test_case1_fires_when_queue_empty():
+    env = make_env(lambda2=0.0)  # lam < 0 -> quant term rewards q = 1
+    q_hat, f_hat, case = kkt.solve_continuous(env)
+    assert case == 1 and q_hat == 1.0
+
+
+def test_lemma3_latency_loose_implies_fmin():
+    # huge t_max -> C4' loose -> f = f_min (Lemma 3)
+    env = make_env(t_max=10.0, lambda2=400.0)
+    q_hat, f_hat, case = kkt.solve_continuous(env)
+    assert case == 2
+    assert f_hat == env.f_min
+
+
+def test_infeasible_returns_none():
+    env = make_env(t_max=1e-5)  # cannot even ship q=1
+    assert kkt.solve_client(env) is None
+
+
+def test_theorem3_integerization_optimal():
+    env = make_env(lambda2=80.0)
+    dec = kkt.solve_client(env)
+    assert dec is not None and dec.feasible
+    # integer neighbours can't beat it
+    for dq in (-1, 1, 2):
+        qq = dec.q + dq
+        if qq < 1:
+            continue
+        f = kkt.optimal_frequency(env, float(qq))
+        if f > env.f_max or math.isinf(f):
+            continue
+        assert kkt.j3(env, f, qq) >= dec.j3 - 1e-12
+
+
+def test_cardano_agrees_with_robust_root():
+    env = make_env(t_max=10.0, lambda2=30.0)  # case-2 regime, small A4
+    c = kkt.cardano_case2(env)
+    r = kkt._solve_case2_cubic(env)
+    if c is not None:
+        assert abs(c - r) < 1e-6
+
+
+def test_remark2_negative_correlation_with_dataset_size():
+    """Paper Remark 2: larger D -> lower q (same channel/queue)."""
+    qs = []
+    for d in (400.0, 800.0, 1200.0, 1600.0, 2000.0):
+        env = make_env(d_size=d, lambda2=200.0)
+        dec = kkt.solve_client(env)
+        assert dec is not None
+        qs.append(dec.q)
+    assert all(a >= b for a, b in zip(qs, qs[1:])), qs
+
+
+def test_remark1_q_rises_with_queue():
+    """lambda2 is the training-progress proxy (rises until equilibrium)."""
+    qs = []
+    for lam in (5.0, 50.0, 200.0, 800.0):
+        dec = kkt.solve_client(make_env(lambda2=lam))
+        assert dec is not None
+        qs.append(dec.q)
+    assert all(a <= b for a, b in zip(qs, qs[1:])), qs
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    lam2=st.floats(0.0, 1e3),
+    d=st.floats(100.0, 3000.0),
+    tmax_model=st.floats(0.01, 3.0),
+    v=st.floats(3e7, 3e8),
+)
+def test_property_closed_form_never_worse_than_grid(lam2, d, tmax_model, v):
+    env = make_env(lambda2=lam2, d_size=d, theta_max=tmax_model, v=v)
+    dec = kkt.solve_client(env)
+    gq, gf, gj = grid_best(env, nq=400)
+    if dec is None:
+        assert math.isnan(gq) or gj == math.inf or kkt.q_max_feasible(env) < 1
+        return
+    # integerized solution within one step of the continuous grid optimum
+    assert dec.j3 <= kkt.j3(env, kkt.optimal_frequency(env, float(dec.q)), dec.q) + 1e-9
+    assert dec.latency <= env.t_max * (1 + 1e-6)
+    assert env.f_min <= dec.f <= env.f_max * (1 + 1e-12)
+    assert dec.q >= 1

@@ -1,0 +1,144 @@
+"""Lyapunov queue stability + genetic algorithm invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds
+from repro.core.genetic import (
+    GAConfig,
+    RoundContext,
+    SystemParams,
+    _participation,
+    _repair_duplicates,
+    _random_chromosome,
+    evaluate_assignment,
+    run_ga,
+)
+from repro.core.lyapunov import LyapunovState, queue_stability_trace
+from repro.wireless.channel import ChannelModel, ChannelParams
+
+
+def test_queue_update_eq23_24():
+    s = LyapunovState(lambda1=5.0, lambda2=1.0, eps1=2.0, eps2=3.0)
+    s2 = s.step(data_term=4.0, quant_term=0.5)
+    assert s2.lambda1 == 5.0 + 4.0 - 2.0
+    assert s2.lambda2 == 0.0  # max(1 + 0.5 - 3, 0)
+
+
+def test_queue_mean_rate_stability_when_under_budget():
+    rng = np.random.default_rng(0)
+    terms1 = rng.uniform(0.0, 1.9, 400)   # mean < eps1 = 1.0? no: mean .95 < 1.0
+    terms2 = rng.uniform(0.0, 0.5, 400)
+    t1, t2 = queue_stability_trace(list(terms1), list(terms2), 1.0, 0.3)
+    # mean-rate stability: lambda^n / n -> 0
+    assert t1[-1] / len(t1) < 0.05
+    assert t2[-1] / len(t2) < 0.05
+
+
+def test_drift_plus_penalty_form():
+    # sound default: lambda * x cross term
+    s = LyapunovState(lambda1=10.0, lambda2=4.0, eps1=2.0, eps2=1.0, v=50.0)
+    j = s.drift_plus_penalty(3.0, 0.5, 0.01)
+    assert j == pytest.approx(10 * 3 + 4 * 0.5 + 50 * 0.01)
+    # the paper's literal eq. 26 form behind the flag
+    sp = LyapunovState(lambda1=10.0, lambda2=4.0, eps1=2.0, eps2=1.0, v=50.0,
+                       paper_drift=True)
+    jp = sp.drift_plus_penalty(3.0, 0.5, 0.01)
+    assert jp == pytest.approx((10 - 2) * 3 + (4 - 1) * 0.5 + 50 * 0.01)
+
+
+def test_paper_drift_rewards_violation_when_queue_short():
+    """Documents why paper_drift is not the default: with lambda < eps the
+    coefficient is negative, so LARGER constraint violation lowers J."""
+    s = LyapunovState(lambda1=0.0, lambda2=0.0, eps1=5.0, eps2=5.0, v=1.0,
+                      paper_drift=True)
+    assert s.drift_plus_penalty(10.0, 0.0, 0.0) < s.drift_plus_penalty(1.0, 0.0, 0.0)
+    sound = LyapunovState(lambda1=0.0, lambda2=0.0, eps1=5.0, eps2=5.0, v=1.0)
+    assert sound.drift_plus_penalty(10.0, 0.0, 0.0) >= sound.drift_plus_penalty(1.0, 0.0, 0.0)
+
+
+def _ctx(u=6, c=6, seed=0):
+    cm = ChannelModel(ChannelParams(n_clients=u, n_channels=c), seed=seed)
+    rng = np.random.default_rng(seed)
+    return RoundContext(
+        rates=cm.draw_rates(),
+        d_sizes=np.maximum(rng.normal(1200, 150, u), 100),
+        g_sq=np.full(u, 4.0),
+        sigma_sq=np.full(u, 1.0),
+        theta_max=np.full(u, 0.5),
+        z=246590,
+    )
+
+
+def test_ga_chromosome_constraints():
+    """C2/C3: channel to <=1 client, client on <=1 channel."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        ch = _random_chromosome(rng, 6, 8)
+        used = [c for c in ch if c >= 0]
+        assert len(used) == len(set(used))
+    # repair kills duplicates
+    bad = np.array([2, 2, 1, -1, 2], dtype=np.int64)
+    fixed = _repair_duplicates(rng, bad)
+    used = [c for c in fixed if c >= 0]
+    assert len(used) == len(set(used))
+    assert 1 in used and 2 in used
+
+
+def test_ga_decision_feasible_and_energy_positive():
+    ctx = _ctx()
+    sysp = SystemParams()
+    lyap = LyapunovState(lambda1=2000.0, lambda2=8000.0, eps1=900.0, eps2=2.0, v=100.0)
+    dec = run_ga(ctx, sysp, lyap, 100.0, GAConfig(generations=8, population=12), seed=1)
+    assert dec.feasible
+    for i in range(len(dec.a)):
+        if dec.a[i]:
+            assert dec.q[i] >= 1
+            assert sysp.f_min <= dec.f[i] <= sysp.f_max * (1 + 1e-9)
+            assert dec.latency[i] <= sysp.t_max * (1 + 1e-6)
+            assert dec.energy[i] > 0
+
+
+def test_ga_improves_over_random():
+    ctx = _ctx(seed=3)
+    sysp = SystemParams()
+    lyap = LyapunovState(lambda1=2000.0, lambda2=8000.0, eps1=900.0, eps2=2.0, v=100.0)
+    rng = np.random.default_rng(0)
+    rand_best = min(
+        evaluate_assignment(_random_chromosome(rng, 6, 6), ctx, sysp, lyap, 100.0).j0
+        for _ in range(10)
+    )
+    dec = run_ga(ctx, sysp, lyap, 100.0, GAConfig(generations=15, population=16), seed=5)
+    assert dec.j0 <= rand_best + 1e-9
+
+
+def test_bound_constants_premises():
+    with pytest.raises(ValueError):
+        bounds.BoundConstants(eta=1.5, tau=6, lipschitz=1.0)   # eta L >= 1
+    with pytest.raises(ValueError):
+        bounds.BoundConstants(eta=0.2, tau=6, lipschitz=1.0)   # 2 eta^2 tau^2 L^2 >= 1
+    c = bounds.BoundConstants(eta=0.05, tau=6, lipschitz=1.0)
+    assert c.a1 > 0 and c.a2 > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), u=st.integers(2, 8))
+def test_property_data_term_scheduling_monotone(seed, u):
+    """Scheduling MORE clients never increases the 4tau(1-a w)G^2 part."""
+    rng = np.random.default_rng(seed)
+    consts = bounds.BoundConstants(eta=0.05, tau=6, lipschitz=1.0)
+    d = np.maximum(rng.normal(1000, 200, u), 10)
+    w_full = d / d.sum()
+    g = rng.uniform(0.5, 4.0, u)
+    sig = rng.uniform(0.1, 2.0, u)
+    a1 = np.zeros(u, dtype=np.int64)
+    sub = rng.choice(u, size=max(u // 2, 1), replace=False)
+    a1[sub] = 1
+    a2 = a1.copy()
+    extra = rng.integers(0, u)
+    a2[extra] = 1
+
+    def sched_part(a):
+        return 4 * consts.tau * np.sum((1 - a * w_full) * g**2)
+
+    assert sched_part(a2) <= sched_part(a1) + 1e-9

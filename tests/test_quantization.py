@@ -1,0 +1,99 @@
+"""Lemma 1 properties + wire-format invariants (unit + hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+
+
+def test_payload_bits_eq5():
+    # paper eq. 5: ell = Z q + Z + 32
+    assert q.payload_bits(246590, 4) == 246590 * 4 + 246590 + 32
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8, 12])
+def test_quantize_error_within_lemma1_step(bits):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4096,))
+    xq, tmax = q.quantize_array(jax.random.PRNGKey(1), x, bits)
+    step = tmax / (2**bits - 1)
+    assert float(jnp.abs(xq - x).max()) <= float(step) + 1e-6
+
+
+def test_unbiasedness_monte_carlo():
+    """Lemma 1: E[Q(x)] = x. Average many independent quantizations."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (512,)) * 0.7
+    n = 400
+    keys = jax.random.split(jax.random.PRNGKey(7), n)
+    qs = jax.vmap(lambda k: q.quantize_array(k, x, 2)[0])(keys)
+    mean = qs.mean(axis=0)
+    tmax = float(jnp.max(jnp.abs(x)))
+    se = tmax / (2**2 - 1) / np.sqrt(n) * 4.0  # ~4 sigma of the rounding noise
+    assert float(jnp.abs(mean - x).max()) < se
+
+
+def test_variance_bound_lemma1():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (2048,))
+    n = 200
+    keys = jax.random.split(jax.random.PRNGKey(11), n)
+    qs = jax.vmap(lambda k: q.quantize_array(k, x, 3)[0])(keys)
+    emp_var = float(jnp.sum(jnp.var(qs, axis=0)))
+    tmax = float(jnp.max(jnp.abs(x)))
+    bound = float(q.variance_bound(x.size, tmax, 3))
+    assert emp_var <= bound * 1.1  # bound + slack for MC noise
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.integers(1, 10),
+    size=st.integers(1, 2000),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**30),
+)
+def test_property_roundtrip_levels(bits, size, scale, seed):
+    """Quantized values always sit on a knob: idx/levels * tmax exactly."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (size,)) * scale
+    xq, tmax = q.quantize_array(jax.random.PRNGKey(seed + 1), x, bits)
+    levels = 2**bits - 1
+    knots = jnp.round(jnp.abs(xq) * (levels / jnp.where(tmax > 0, tmax, 1.0)))
+    recon = knots * (tmax / levels)
+    np.testing.assert_allclose(jnp.abs(xq), recon, rtol=1e-4, atol=1e-5)
+    # sign preservation
+    assert bool(jnp.all((xq == 0) | (jnp.sign(xq) == jnp.sign(x))))
+
+
+def test_zero_tensor_safe():
+    x = jnp.zeros((64,))
+    xq, tmax = q.quantize_array(jax.random.PRNGKey(0), x, 4)
+    assert float(tmax) == 0.0
+    assert not bool(jnp.isnan(xq).any())
+    assert float(jnp.abs(xq).max()) == 0.0
+
+
+def test_pytree_shared_range():
+    tree = {"a": jnp.array([0.5, -1.0]), "b": jnp.array([[2.0, -0.25]])}
+    tq, tmax = q.quantize_pytree(jax.random.PRNGKey(0), tree, 8)
+    assert float(tmax) == 2.0
+    # every leaf reconstructs within one step of the SHARED range
+    step = 2.0 / (2**8 - 1)
+    for k in tree:
+        assert float(jnp.abs(tq[k] - tree[k]).max()) <= step + 1e-6
+
+
+def test_traced_q_bits():
+    """q may be a traced scalar (the controller decides it at runtime)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+
+    @jax.jit
+    def f(qb):
+        return q.quantize_array(jax.random.PRNGKey(1), x, qb)[0]
+
+    out4 = f(jnp.asarray(4.0))
+    out8 = f(jnp.asarray(8.0))
+    err4 = float(jnp.abs(out4 - x).max())
+    err8 = float(jnp.abs(out8 - x).max())
+    assert err8 < err4

@@ -1,0 +1,124 @@
+"""Sharding rules + a miniature dry-run on a 1x1 mesh (CPU-safe).
+
+The full 16x16 / 2x16x16 sweep runs via benchmarks/dryrun_sweep.py in a
+separate process (the 512-device XLA flag must be set before jax init);
+here we validate the rule machinery itself.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_reduced
+from repro.dist import sharding as shd
+from repro.dist.hlo_analysis import loop_summary, weighted_collectives
+from repro.launch.mesh import make_host_mesh
+from repro.models import abstract_params
+
+
+def fake_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_param_specs_cover_tree():
+    mesh = fake_mesh()
+    cfg = get_reduced("llama3_8b")
+    params = abstract_params(cfg)
+    specs = shd.make_param_specs(mesh, params)
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    n_specs = len(jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_leaves == n_specs
+
+
+def test_divisibility_fallback():
+    """A 16-way axis must never be assigned to a non-divisible dim."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # simulated big mesh sizes via explicit checks of _pick
+    assert shd._pick(mesh, 8, ["model", None]) == "model"  # 8 % 1 == 0
+    # seamless vocab 256206 on a 16-wide model axis would not divide;
+    # emulate by checking mesh_axis_size handling
+    assert shd.mesh_axis_size(mesh, ("data", "model")) == 1
+
+
+def test_stacked_layer_leading_axis_never_sharded():
+    mesh = fake_mesh()
+    cfg = get_reduced("yi_6b")
+    params = abstract_params(cfg)
+    specs = shd.make_param_specs(mesh, params)
+    wq_spec = specs["layers"]["attn"]["wq"]
+    assert wq_spec[0] is None  # leading L axis replicated
+
+
+def test_lower_and_compile_tiny_mesh():
+    """The whole train-step lowering path works on a 1x1 host mesh."""
+    from repro.launch import steps
+    from repro.models.config import InputShape
+    from repro.optim import adamw
+
+    mesh = make_host_mesh()
+    cfg = get_reduced("granite_moe_1b_a400m")
+    shape = InputShape("t", 64, 2, "train")
+    lowered = steps.lower_train_step(cfg, mesh, shape, adamw(1e-3))
+    compiled = lowered.compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_lower_decode_tiny_mesh():
+    from repro.launch import steps
+    from repro.models.config import InputShape
+
+    mesh = make_host_mesh()
+    cfg = get_reduced("rwkv6_7b")
+    shape = InputShape("d", 128, 2, "decode")
+    lowered = steps.lower_decode_step(cfg, mesh, shape)
+    compiled = lowered.compile()
+    assert compiled is not None
+
+
+def test_hlo_collective_parser_loop_weighting():
+    hlo = """
+HloModule test
+
+%cond (p: (s32[])) -> pred[] {
+  %p = (s32[]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(24)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[])) -> (s32[]) {
+  %p = (s32[]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %ar = f32[128,256] all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %t = (s32[]) tuple(%i)
+}
+
+ENTRY %main (a: f32[2]) -> f32[2] {
+  %a = f32[2] parameter(0)
+  %w = (s32[]) while(%init), condition=%cond, body=%body
+  %ag = f32[64,128] all-gather(%a), replica_groups={{0,1}}, dimensions={0}
+  ROOT %r = f32[2] copy(%a)
+}
+"""
+    res = weighted_collectives(hlo)
+    # all-reduce: 128*256*4 bytes * 24 trips
+    assert res["bytes"]["all-reduce"] == 128 * 256 * 4 * 24
+    # all-gather operand = result / group size (2)
+    assert res["bytes"]["all-gather"] == 64 * 128 * 4 / 2
+    loops = loop_summary(hlo)
+    assert loops and loops[0]["trip"] == 24
+
+
+def test_batch_and_cache_specs():
+    mesh = fake_mesh()
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+    specs = shd.batch_specs(mesh, batch)
+    assert isinstance(specs["tokens"], P)
+    cfg = get_reduced("llama3_8b")
+    from repro.models import cache_spec
+
+    cache = cache_spec(cfg, 8, 128)
+    cspecs = shd.cache_specs(mesh, cache)
+    assert isinstance(cspecs["k"], P)

@@ -1,0 +1,104 @@
+"""Substrate tests: optimizers, checkpointing, data pipeline, wireless."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import latest_step, load_checkpoint, save_checkpoint
+from repro.data.synthetic import (
+    FEMNIST_PROXY,
+    SyntheticImageTask,
+    TINY_TASK,
+    dirichlet_class_probs,
+    gaussian_sizes,
+    make_federated_datasets,
+)
+from repro.optim import adam, adamw, apply_updates, clip_by_global_norm, sgd
+from repro.wireless.channel import ChannelModel, ChannelParams
+from repro.wireless.energy import comm_energy, comp_energy
+
+
+def quad_problem():
+    target = jnp.array([1.0, -2.0, 3.0])
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    return {"w": jnp.zeros(3)}, loss, target
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), sgd(0.05, momentum=0.9),
+                                 adam(0.1), adamw(0.1, weight_decay=0.0)])
+def test_optimizers_converge_quadratic(opt):
+    params, loss, target = quad_problem()
+    state = opt.init(params)
+    g = jax.grad(loss)
+    for _ in range(200):
+        ups, state = opt.update(g(params), state, params)
+        params = apply_updates(params, ups)
+    np.testing.assert_allclose(params["w"], target, atol=0.05)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    total = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = {"layer": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                        "b": np.zeros(3, np.float32)}}
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 10, params, extra={"loss": 1.5})
+    save_checkpoint(d, 20, params)
+    assert latest_step(d) == 20
+    loaded, meta = load_checkpoint(d, 10)
+    np.testing.assert_array_equal(loaded["layer"]["w"], params["layer"]["w"])
+    assert meta["loss"] == 1.5
+
+
+def test_synthetic_task_learnable_structure():
+    task = SyntheticImageTask(TINY_TASK, seed=0)
+    d = task.sample(500)
+    # same-class samples are closer to their template than to others
+    t = task.templates
+    x0 = d["x"][d["y"] == 0]
+    if x0.shape[0] > 3:
+        flat = lambda a: a.reshape(a.shape[0], -1)
+        dist_own = np.linalg.norm(flat(x0 - t[0]), axis=1).mean()
+        dist_other = np.linalg.norm(flat(x0 - t[1]), axis=1).mean()
+        assert dist_own < dist_other
+
+
+def test_dirichlet_partition_and_sizes():
+    probs = dirichlet_class_probs(5, 10, alpha=0.3, seed=0)
+    np.testing.assert_allclose(probs.sum(axis=1), 1.0, rtol=1e-6)
+    sizes = gaussian_sizes(10, 1200, 300, seed=1)
+    assert (sizes >= 50).all()
+    task = SyntheticImageTask(TINY_TASK, seed=0)
+    ds = make_federated_datasets(task, 3, np.array([100, 200, 300]))
+    assert [d["x"].shape[0] for d in ds] == [100, 200, 300]
+
+
+def test_channel_rates_physical():
+    cm = ChannelModel(ChannelParams(n_clients=10, n_channels=10), seed=0)
+    r = cm.draw_rates()
+    assert r.shape == (10, 10)
+    assert (r > 1e6).all() and (r < 1e9).all()  # Mbit/s..Gbit/s regime
+    # farther clients get lower average rates
+    far = np.argmax(cm.distances)
+    near = np.argmin(cm.distances)
+    rates = np.mean([cm.draw_rates() for _ in range(20)], axis=0)
+    assert rates[near].mean() > rates[far].mean()
+
+
+def test_energy_formulas_eq15_17():
+    # eq. 15: E = p * ell / v ; eq. 17: E = tau_e alpha gamma D f^2
+    assert comm_energy(0.2, 1e6, 1e8) == pytest.approx(0.2 * 1e6 / 1e8)
+    assert comp_energy(2, 1e-26, 1000, 1200, 5e8) == pytest.approx(
+        2 * 1e-26 * 1000 * 1200 * 25e16
+    )
