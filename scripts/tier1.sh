@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the full suite with PYTHONPATH=src, requiring ZERO
+# collection errors — a module that dies on import must fail the gate
+# even when every collected test passes (that is exactly how the
+# repro.dist regression hid: 6 of 12 modules silently uncollectable).
+#
+# Works with or without the optional dev deps (hypothesis): property
+# test modules importorskip it and count as skips, not errors.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+collect_log="$(mktemp)"
+trap 'rm -f "$collect_log"' EXIT
+
+python -m pytest -q --collect-only -p no:cacheprovider >"$collect_log" 2>&1
+collect_status=$?
+if [ "$collect_status" -ne 0 ] || grep -qE "(^ERROR|[0-9]+ errors?)" "$collect_log"; then
+    echo "tier1: FAIL — test collection must be error-free" >&2
+    tail -n 40 "$collect_log" >&2
+    exit 1
+fi
+echo "tier1: collection clean ($(grep -cE '::' "$collect_log" || true) items)"
+
+exec python -m pytest -q

@@ -30,6 +30,27 @@ Pytree = Any
 RANGE_BITS = 32  # the scalar range is transmitted as one fp32 (paper eq. 5)
 
 
+def static_q_bits(q_bits) -> int | None:
+    """``int(q_bits)`` when the level is statically known, else None.
+
+    Accepts Python ints, numpy integers, 0-d numpy/JAX arrays, and traced
+    scalars (which return None) without touching private ``jax.core``
+    surface — conversion of a tracer raises a JAX concretization error,
+    which is exactly the "not static" signal.
+    """
+    if isinstance(q_bits, int):
+        return q_bits
+    try:
+        return int(q_bits)
+    except (
+        TypeError,
+        ValueError,
+        jax.errors.ConcretizationTypeError,
+        jax.errors.TracerIntegerConversionError,
+    ):
+        return None
+
+
 def payload_bits(z: int, q: int) -> int:
     """Uplink payload length in bits for a Z-dim model at level q (eq. 5)."""
     return z * int(q) + z + RANGE_BITS
@@ -83,8 +104,10 @@ def quantize_indices(
     frac = scaled - lower
     u = jax.random.uniform(key, x.shape, jnp.float32)
     idx = lower + (u < frac).astype(jnp.float32)
-    static_q = int(q_bits) if not isinstance(q_bits, jax.core.Tracer) else 16
-    dtype = jnp.uint8 if static_q <= 8 else jnp.uint16
+    static_q = static_q_bits(q_bits)
+    # Traced level: a single compiled step serves any q, so size the index
+    # plane for the worst case (q <= 16).
+    dtype = jnp.uint8 if static_q is not None and static_q <= 8 else jnp.uint16
     signs = (x < 0).astype(jnp.uint8)
     return idx.astype(dtype), signs, theta_max
 

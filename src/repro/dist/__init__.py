@@ -1,0 +1,15 @@
+"""Sharding substrate: rule-based parameter specs, activation sharding
+constraints, and loop-aware HLO collective accounting.
+
+Three modules, consumed by ``repro.launch`` / ``repro.models``:
+
+  * :mod:`repro.dist.sharding` — PartitionSpec construction for params /
+    optimizer state / batches / KV caches on a named mesh;
+  * :mod:`repro.dist.activations` — ``shard_act`` constraints inside the
+    model forward, active only under :func:`activation_mesh`;
+  * :mod:`repro.dist.hlo_analysis` — compiled-HLO collective byte totals
+    weighted by while-loop trip counts (the dry-run roofline input).
+"""
+from repro.dist import activations, hlo_analysis, sharding
+
+__all__ = ["activations", "hlo_analysis", "sharding"]

@@ -1,0 +1,78 @@
+"""Activation sharding constraints inside the model forward.
+
+The model code calls ``shard_act(x, pattern)`` at layout-critical points
+(post-projection heads, SwiGLU hidden, rwkv chunk tensors). Outside an
+:func:`activation_mesh` context this is an identity — eager smoke tests
+and the FL numerics tests never touch device placement. Under the
+context (the launcher's lowering paths) it becomes a
+``with_sharding_constraint``:
+
+  * the pattern's head/feature dim is pinned to the ``model`` axis
+    (Megatron-style tensor parallelism), falling back to no constraint
+    when the axis does not divide the dim (e.g. 4-head reduced configs
+    on a 16-wide axis);
+  * the leading batch dim stays ``UNCONSTRAINED`` so XLA propagates
+    whatever the step's in_shardings chose (plain dp, or client x dp in
+    the federated round, where the same forward runs under ``vmap``);
+  * remaining dims replicate.
+
+Patterns:  ``btd``  (B, T, D)          — layer boundary, D replicated
+           ``bshd`` (B, S, H, hd)      — attention heads on ``model``
+           ``bsf``  (B, S, F)          — SwiGLU hidden on ``model``
+           ``h2``   (B, ?, H, ...)     — head axis at index 2
+           ``h3``   (B, ?, ?, H, ...)  — head axis at index 3
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_activation_mesh", default=None
+)
+
+# pattern -> index of the dim pinned to the model axis (None: no tp dim)
+_MODEL_DIM = {"btd": None, "bshd": 2, "bsf": 2, "h2": 2, "h3": 3}
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh):
+    """Enable ``shard_act`` constraints on ``mesh`` for the duration of a
+    ``jit(...).lower`` (or an actual execution) of a step function."""
+    token = _ACTIVE_MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH.reset(token)
+
+
+def current_activation_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH.get()
+
+
+def shard_act(x: jax.Array, pattern: str) -> jax.Array:
+    """Constrain activation ``x`` per ``pattern``; identity outside an
+    :func:`activation_mesh` context."""
+    if pattern not in _MODEL_DIM:
+        raise ValueError(
+            f"unknown shard_act pattern {pattern!r}; known: {sorted(_MODEL_DIM)}"
+        )
+    mesh = _ACTIVE_MESH.get()
+    if mesh is None:
+        return x
+    model_dim = _MODEL_DIM[pattern]
+    model_size = mesh.shape.get("model", 1)
+    entries: list = [None] * x.ndim
+    if x.ndim:
+        entries[0] = P.UNCONSTRAINED
+    if (
+        model_dim is not None
+        and model_dim < x.ndim
+        and x.shape[model_dim] % model_size == 0
+    ):
+        entries[model_dim] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))

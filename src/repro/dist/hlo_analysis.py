@@ -1,0 +1,286 @@
+"""Loop-aware collective accounting over compiled HLO text.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE, so the collectives
+inside a ``lax.scan`` over layers (trip count = n_layers) are wildly
+under-reported by a naive parse. This module:
+
+  * splits the HLO module into computations and records which computation
+    is a while-loop body/condition and with what trip count (XLA's
+    ``known_trip_count`` annotation when present, else the loop bound
+    recovered from the condition's ``constant(N)`` / ``compare``);
+  * sums collective bytes per op kind, multiplying every op by the
+    product of the trip counts of the while loops it is (transitively)
+    nested in;
+  * reports *operand* bytes: the result line's shape for all-reduce /
+    reduce-scatter / all-to-all / collective-permute, and result bytes
+    divided by the replica-group size for all-gather (each participant
+    contributes 1/g of the gathered result).
+
+Contract (consumed by ``launch/dryrun.py`` and the benchmarks):
+
+  ``weighted_collectives(hlo) -> {
+      "bytes": {kind: weighted_bytes},      # trip-count weighted
+      "counts": {kind: raw_op_count},       # static op count, unweighted
+      "total_bytes": float,
+      "unweighted_total_bytes": float,
+      "top_ops": [{"bytes", "kind", "op"}], # weighted, descending
+  }``
+
+  ``loop_summary(hlo) -> [{"body", "cond", "trip", "collective_bytes"}]``
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+_COLL_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# longest-first so "all-gather" is not shadowed by a shorter kind
+_COLL_RE = re.compile(
+    r"\b(" + "|".join(sorted(_COLL_KINDS, key=len, reverse=True)) + r")(-start)?\("
+)
+_DONE_RE = re.compile(r"\b(?:" + "|".join(_COLL_KINDS) + r")-done\(")
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|bf16|f16|f32|f64|f8e4m3\w*|f8e5m2\w*|u8|s8|u16|s16|u32|s32|u64|s64)"
+    r"\[([0-9,]*)\]"
+)
+_DTYPE_BYTES = {
+    "pred": 1, "u8": 1, "s8": 1, "bf16": 2, "f16": 2, "u16": 2, "s16": 2,
+    "f32": 4, "u32": 4, "s32": 4, "f64": 8, "u64": 8, "s64": 8,
+}
+
+_COMP_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"=.*\bwhile\(")
+_COND_REF_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_REF_RE = re.compile(r"body=%?([\w.\-]+)")
+_CALL_REF_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCH_REF_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_ANNOT_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DIRECTION_RE = re.compile(r"direction=(LT|LE|GT|GE|EQ|NE)")
+_OP_NAME_RE = re.compile(r'op_name="([^"]+)"')
+_LHS_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_EMPTY_RE = re.compile(r"replica_groups=\{\}")
+_NUM_PARTITIONS_RE = re.compile(r"num_partitions=(\d+)")
+_REPLICA_COUNT_RE = re.compile(r"replica_count=(\d+)")
+
+TOP_OPS = 25
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """Map computation name -> its body lines, in module order."""
+    comps: dict[str, list[str]] = {}
+    current: Optional[str] = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m and "=" not in line.split("(", 1)[0]:
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(line)
+    return comps
+
+
+def _dtype_nbytes(dtype: str) -> int:
+    if dtype in _DTYPE_BYTES:
+        return _DTYPE_BYTES[dtype]
+    if dtype.startswith("f8"):
+        return 1
+    return 4
+
+
+def _result_bytes(line: str, op_end: int, *, is_start: bool = False) -> int:
+    """Result shape bytes: shapes between '=' and the op token.
+
+    Sync ops sum every shape (a tuple all-reduce genuinely moves each
+    operand). Async ``-start`` ops return (operand, result, context...)
+    tuples — the operand/result halves alias the same transfer, so
+    counting the sum would double the bytes; take the largest single
+    shape instead (equals the result for every collective kind)."""
+    eq = line.find("=")
+    seg = line[eq + 1 : op_end] if eq >= 0 else line[:op_end]
+    sizes = []
+    for m in _SHAPE_RE.finditer(seg):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        sizes.append(n * _dtype_nbytes(m.group(1)))
+    if not sizes:
+        return 0
+    return max(sizes) if is_start else sum(sizes)
+
+
+def _group_size(line: str, default_group: int = 1) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len([t for t in m.group(1).split(",") if t.strip()]), 1)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # [G,S]<=[N]: G groups of S participants
+        return max(int(m.group(2)), 1)
+    if _GROUPS_EMPTY_RE.search(line):
+        # replica_groups={} is the legal "one group of ALL participants"
+        # form — the size is the module's partition/replica count.
+        return max(default_group, 1)
+    return 1
+
+
+def _module_group_default(hlo_text: str) -> int:
+    """Participant count for empty replica_groups: the module header's
+    num_partitions (SPMD) or replica_count, whichever is larger."""
+    head = hlo_text[:4096]
+    mp = _NUM_PARTITIONS_RE.search(head)
+    mr = _REPLICA_COUNT_RE.search(head)
+    return max(
+        int(mp.group(1)) if mp else 1,
+        int(mr.group(1)) if mr else 1,
+    )
+
+
+def _trip_from_condition(cond_lines: list[str]) -> Optional[int]:
+    """Recover the loop bound from an induction-variable condition:
+    the largest integer ``constant(N)``, +1 for an LE comparison."""
+    consts = [int(c) for ln in cond_lines for c in _CONST_RE.findall(ln)]
+    if not consts:
+        return None
+    trip = max(consts)
+    direction = next(
+        (m.group(1) for ln in cond_lines for m in [_DIRECTION_RE.search(ln)] if m),
+        "LT",
+    )
+    if direction == "LE":
+        trip += 1
+    return max(trip, 1)
+
+
+def _build_loop_graph(comps: dict[str, list[str]]):
+    """Returns (parents, whiles): ``parents[child] = (parent_comp, trip)``
+    where trip is the while trip count for body/cond edges and 1 for
+    plain call / to_apply / branch edges; ``whiles`` lists every while op
+    as (parent_comp, cond, body, trip)."""
+    parents: dict[str, tuple[str, int]] = {}
+    whiles: list[tuple[str, str, str, int]] = []
+    for comp, lines in comps.items():
+        for line in lines:
+            if _WHILE_RE.search(line):
+                mc, mb = _COND_REF_RE.search(line), _BODY_REF_RE.search(line)
+                if not (mc and mb):
+                    continue
+                cond, body = mc.group(1), mb.group(1)
+                ma = _TRIP_ANNOT_RE.search(line)
+                trip = int(ma.group(1)) if ma else None
+                if trip is None:
+                    trip = _trip_from_condition(comps.get(cond, []))
+                trip = trip or 1
+                parents.setdefault(body, (comp, trip))
+                parents.setdefault(cond, (comp, trip))
+                whiles.append((comp, cond, body, trip))
+            else:
+                for m in _CALL_REF_RE.finditer(line):
+                    parents.setdefault(m.group(1), (comp, 1))
+                mb = _BRANCH_REF_RE.search(line)
+                if mb:
+                    for ref in mb.group(1).split(","):
+                        name = ref.strip().lstrip("%")
+                        if name:
+                            parents.setdefault(name, (comp, 1))
+    return parents, whiles
+
+
+def _comp_multipliers(comps, parents) -> dict[str, int]:
+    mults: dict[str, int] = {}
+
+    def mult(comp: str, _depth: int = 0) -> int:
+        if comp in mults:
+            return mults[comp]
+        if _depth > 64 or comp not in parents:  # root (ENTRY) or cycle guard
+            mults[comp] = 1
+            return 1
+        parent, trip = parents[comp]
+        m = trip * mult(parent, _depth + 1)
+        mults[comp] = m
+        return m
+
+    for comp in comps:
+        mult(comp)
+    return mults
+
+
+def _collective_ops(comps: dict[str, list[str]], default_group: int = 1):
+    """Yield (comp, kind, raw_bytes, label) for every collective op
+    definition (async -done halves are skipped; -start carries the op)."""
+    for comp, lines in comps.items():
+        for line in lines:
+            if "=" not in line or _DONE_RE.search(line):
+                continue
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            kind = m.group(1)
+            nbytes = _result_bytes(line, m.start(), is_start=bool(m.group(2)))
+            if kind == "all-gather":
+                nbytes = nbytes / _group_size(line, default_group)
+            mn = _OP_NAME_RE.search(line)
+            if mn:
+                label = mn.group(1)
+            else:
+                ml = _LHS_RE.match(line)
+                label = ml.group(1) if ml else kind
+            yield comp, kind, nbytes, label
+
+
+def weighted_collectives(hlo_text: str) -> dict:
+    """Per-kind collective byte totals with while-trip weighting."""
+    comps = _split_computations(hlo_text)
+    parents, _ = _build_loop_graph(comps)
+    mults = _comp_multipliers(comps, parents)
+    default_group = _module_group_default(hlo_text)
+
+    totals: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    raw_total = 0.0
+    ops: list[dict] = []
+    for comp, kind, nbytes, label in _collective_ops(comps, default_group):
+        weighted = nbytes * mults.get(comp, 1)
+        totals[kind] = totals.get(kind, 0.0) + weighted
+        counts[kind] = counts.get(kind, 0) + 1
+        raw_total += nbytes
+        ops.append({"bytes": weighted, "kind": kind, "op": label})
+    ops.sort(key=lambda o: -o["bytes"])
+    return {
+        "bytes": totals,
+        "counts": counts,
+        "total_bytes": sum(totals.values()),
+        "unweighted_total_bytes": raw_total,
+        "top_ops": ops[:TOP_OPS],
+    }
+
+
+def loop_summary(hlo_text: str) -> list[dict]:
+    """One record per while loop: body/cond computation names, the trip
+    count, and the (unweighted) collective bytes inside the body."""
+    comps = _split_computations(hlo_text)
+    parents, whiles = _build_loop_graph(comps)
+    body_bytes: dict[str, float] = {}
+    for comp, _kind, nbytes, _label in _collective_ops(
+        comps, _module_group_default(hlo_text)
+    ):
+        body_bytes[comp] = body_bytes.get(comp, 0.0) + nbytes
+    return [
+        {
+            "body": body,
+            "cond": cond,
+            "trip": trip,
+            "collective_bytes": body_bytes.get(body, 0.0),
+        }
+        for _parent, cond, body, trip in whiles
+    ]

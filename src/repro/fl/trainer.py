@@ -37,6 +37,10 @@ class RoundRecord:
     q_levels: np.ndarray
     latency: float
     payload_bits: float
+    # per-client assigned uplink rate [bit/s], 0 where unscheduled — q_i is
+    # driven jointly by (v_i, D_i), so analyses of Remark 1/2 behaviour need
+    # the realized rate to condition on.
+    rates: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -132,6 +136,10 @@ class FLExperiment:
         for n in range(n_rounds):
             ctx = self._context()
             dec = self.policy.decide(ctx)
+            v_assigned = np.zeros(len(self.clients))
+            for c, cid in enumerate(dec.assign):
+                if cid >= 0:
+                    v_assigned[cid] += float(ctx.rates[cid, c])
 
             uploads = []
             weights = []
@@ -175,6 +183,7 @@ class FLExperiment:
                     q_levels=dec.q.copy(),
                     latency=float(dec.latency.max() if dec.a.any() else 0.0),
                     payload_bits=payload,
+                    rates=v_assigned,
                 )
             )
             if verbose:

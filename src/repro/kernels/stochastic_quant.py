@@ -81,7 +81,15 @@ def dequantize(
     *, interpret: bool = True, block_m: int = BLOCK_M,
 ) -> jax.Array:
     m, lanes = idx.shape
-    assert lanes == LANES and m % block_m == 0
+    assert lanes == LANES, (
+        f"dequantize expects lane-tiled (M, {LANES}) input, got idx {idx.shape}"
+    )
+    assert m % block_m == 0, (
+        f"dequantize: M={m} must be a multiple of block_m={block_m}"
+    )
+    assert signs.shape == idx.shape, (
+        f"dequantize: signs {signs.shape} must match idx {idx.shape}"
+    )
     kernel = functools.partial(_dequant_kernel, q_bits=q_bits)
     return pl.pallas_call(
         kernel,
@@ -117,8 +125,31 @@ def aggregate(
     *, interpret: bool = True, block_m: int = BLOCK_M,
 ) -> jax.Array:
     k, m, lanes = idx.shape
-    assert lanes == LANES and m % block_m == 0
-    qb = jnp.broadcast_to(jnp.asarray(q_bits, jnp.float32), (k,))
+    assert lanes == LANES, (
+        f"aggregate expects lane-tiled (K, M, {LANES}) input, got idx {idx.shape}"
+    )
+    assert m % block_m == 0, (
+        f"aggregate: M={m} must be a multiple of block_m={block_m}"
+    )
+    assert signs.shape == idx.shape, (
+        f"aggregate: signs {signs.shape} must match idx {idx.shape}"
+    )
+    scales = jnp.asarray(scales, jnp.float32)
+    weights = jnp.asarray(weights, jnp.float32)
+    assert scales.shape == (k,), (
+        f"aggregate: scales must be one fp32 range per client, shape ({k},), "
+        f"got {scales.shape}"
+    )
+    assert weights.shape == (k,), (
+        f"aggregate: weights must be one eq.-2 weight per client, shape ({k},), "
+        f"got {weights.shape}"
+    )
+    qb_in = jnp.asarray(q_bits)
+    assert qb_in.ndim == 0 or qb_in.shape == (k,), (
+        f"aggregate: q_bits must be a scalar or per-client ({k},), "
+        f"got shape {qb_in.shape}"
+    )
+    qb = jnp.broadcast_to(qb_in.astype(jnp.float32), (k,))
     levels = 2.0**qb - 1.0
     coef = (weights * scales / levels).astype(jnp.float32).reshape(1, k)
     kernel = functools.partial(_aggregate_kernel, n_clients=k)

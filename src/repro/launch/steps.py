@@ -278,16 +278,21 @@ def lower_fl_round(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
     # within-client sharding excludes the client axis (clients own their
-    # full model copy; FSDP runs over the intra-pod 'data' axis only).
-    intra_dp = tuple(a for a in ("data",) if a in mesh.shape)
+    # full model copy; FSDP runs over the intra-pod 'data' axis only —
+    # unless 'data' IS the client axis, as on the 1x1 host mesh).
+    intra_dp = tuple(
+        a for a in ("data",) if a in mesh.shape and a != client_axis
+    )
     pspecs = shd.make_param_specs(mesh, params, dp_override=intra_dp)
     cspecs = jax.tree_util.tree_map(
         lambda s: P(client_axis, *s), pspecs, is_leaf=lambda x: isinstance(x, P)
     )
     cspecs = shd.to_named(mesh, cspecs)
-    # batch: client axis then data axis on the local batch dim
+    # batch: client axis then the intra-client data axis (if any) on the
+    # local batch dim
+    local_dp = intra_dp[0] if intra_dp else None
     bspecs = shd.to_named(mesh, {
-        k: P(client_axis, "data", *([None] * (v.ndim - 2)))
+        k: P(client_axis, local_dp, *([None] * (v.ndim - 2)))
         for k, v in per_client.items()
     })
     rep = shd.to_named(mesh, P())

@@ -6,11 +6,17 @@ assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS",
     "run pytest without the dry-run XLA_FLAGS"
 )
 
-from hypothesis import HealthCheck, settings
-
-settings.register_profile(
-    "repro",
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-)
-settings.load_profile("repro")
+# hypothesis is an optional dev dependency: the property-based modules
+# importorskip it themselves, and collection of the rest of the suite
+# must survive a minimal environment without it.
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    pass
+else:
+    settings.register_profile(
+        "repro",
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile("repro")

@@ -39,16 +39,25 @@ def test_q_levels_rise_with_training(qccf_result):
 def test_q_negatively_correlated_with_dataset_size():
     """Remark 2: clients with more data quantize coarser. Needs the
     paper-scale payload (FEMNIST Z = 246590) so the latency constraint
-    actually binds — on the tiny task q is insensitive to D by design."""
+    actually binds — on the tiny task q is insensitive to D by design.
+
+    q_i is driven jointly by the assigned uplink rate v_i (positively)
+    and D_i (negatively, via the compute share of the deadline), and the
+    per-round rate spread moves q ~4x more than the D spread, so a raw
+    q-vs-D correlation is channel noise. Regress q on (1, v, D) per
+    round and check the D coefficient — Remark 2 ceteris paribus."""
     exp = build_experiment("qccf", task="femnist", beta=300.0, seed=11)
     d = np.array([c.d_size for c in exp.clients], dtype=np.float64)
     res = exp.run(10, eval_every=50)
-    corrs = []
+    d_coefs = []
     for r in res.records:
         m = r.q_levels > 0
         if m.sum() >= 4 and np.std(r.q_levels[m]) > 0 and np.std(d[m]) > 0:
-            corrs.append(np.corrcoef(r.q_levels[m], d[m])[0, 1])
-    assert corrs and np.mean(corrs) < 0.0, np.mean(corrs)
+            x = np.stack([np.ones(int(m.sum())), r.rates[m], d[m]], axis=1)
+            coef, *_ = np.linalg.lstsq(x, r.q_levels[m].astype(np.float64),
+                                       rcond=None)
+            d_coefs.append(coef[2])
+    assert d_coefs and np.mean(d_coefs) < 0.0, d_coefs
 
 
 def test_latency_constraint_respected(qccf_result):

@@ -1,0 +1,81 @@
+"""Heterogeneous-level aggregation: the Pallas fused kernel vs the
+reference per-client dequantize + eq.-2 weighted sum.
+
+The paper's doubly adaptive regime gives every client its own q_i, so the
+server-side aggregate must mix wire payloads quantized at *different*
+levels. ``test_kernels.py`` exercises this against the kernel-ref oracle
+but needs hypothesis; this module pins the kernel against the
+``repro.core.quantization`` wire-format reference (the FL runtime's
+implementation) and stays collectable in a minimal environment.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import dequantize_indices, quantize_indices
+from repro.kernels import stochastic_quant as sq
+
+M = 256
+K_QS = [(2, [1, 8]), (3, [2, 4, 8]), (5, [1, 2, 3, 6, 8])]
+
+
+@pytest.mark.parametrize("k,qs", K_QS)
+def test_aggregate_matches_per_client_dequant_oracle(k, qs):
+    """sum_i w_i Q_{q_i}(theta_i) with per-client q_i: fused kernel ==
+    dequantize_indices-per-client + weighted sum."""
+    keys = jax.random.split(jax.random.PRNGKey(42), k + 1)
+    weights = jax.nn.softmax(jax.random.normal(keys[0], (k,)))
+
+    idxs, sgns, scales, oracle_terms = [], [], [], []
+    for i, q in enumerate(qs):
+        x = jax.random.normal(keys[i + 1], (M, 128)) * (0.3 + 0.2 * i)
+        idx, sgn, tmax = quantize_indices(jax.random.PRNGKey(100 + i), x, q)
+        assert idx.dtype == jnp.uint8  # q <= 8 stays in the u8 wire format
+        idxs.append(idx)
+        sgns.append(sgn)
+        scales.append(tmax)
+        oracle_terms.append(weights[i] * dequantize_indices(idx, sgn, tmax, q))
+
+    out = sq.aggregate(
+        jnp.stack(idxs), jnp.stack(sgns), jnp.stack(scales), weights,
+        jnp.array(qs), interpret=True,
+    )
+    expect = sum(oracle_terms)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_aggregate_hetero_unbiased_toward_source():
+    """Identical source model, heterogeneous q_i: the weighted aggregate of
+    unbiased per-client quantizations stays within the coarsest client's
+    quantization step of the source."""
+    k, qs = 3, [2, 4, 8]
+    x = jax.random.normal(jax.random.PRNGKey(7), (M, 128)) * 0.4
+    weights = jnp.array([0.2, 0.3, 0.5])
+    idxs, sgns, scales = [], [], []
+    for i, q in enumerate(qs):
+        idx, sgn, tmax = quantize_indices(jax.random.PRNGKey(i), x, q)
+        idxs.append(idx)
+        sgns.append(sgn)
+        scales.append(tmax)
+    out = sq.aggregate(
+        jnp.stack(idxs), jnp.stack(sgns), jnp.stack(scales), weights,
+        jnp.array(qs), interpret=True,
+    )
+    step_coarsest = float(max(scales)) / (2 ** min(qs) - 1)
+    assert float(jnp.abs(out - x).mean()) < step_coarsest
+
+
+def test_aggregate_validates_scales_and_weights_lengths():
+    k = 3
+    idx = jnp.zeros((k, M, 128), jnp.uint8)
+    sgn = jnp.zeros((k, M, 128), jnp.uint8)
+    good_s = jnp.ones((k,))
+    good_w = jnp.ones((k,)) / k
+    with pytest.raises(AssertionError, match="scales"):
+        sq.aggregate(idx, sgn, jnp.ones((k + 1,)), good_w, 4, interpret=True)
+    with pytest.raises(AssertionError, match="weights"):
+        sq.aggregate(idx, sgn, good_s, jnp.ones((k - 1,)), 4, interpret=True)
+    with pytest.raises(AssertionError, match="q_bits"):
+        sq.aggregate(idx, sgn, good_s, good_w, jnp.array([4, 4]), interpret=True)

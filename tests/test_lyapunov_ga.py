@@ -1,6 +1,7 @@
 """Lyapunov queue stability + genetic algorithm invariants."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; property tests skip without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bounds

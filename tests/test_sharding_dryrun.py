@@ -111,6 +111,28 @@ ENTRY %main (a: f32[2]) -> f32[2] {
     assert loops and loops[0]["trip"] == 24
 
 
+def test_hlo_parser_async_start_and_empty_groups():
+    """Async -start tuples count once (operand/result alias one transfer)
+    and replica_groups={} means one group of ALL participants."""
+    hlo = """
+HloModule async, replica_count=1, num_partitions=8
+
+ENTRY %main (a: f32[2]) -> f32[2] {
+  %a = f32[2] parameter(0)
+  %ars = (f32[128,256], f32[128,256]) all-reduce-start(%x), replica_groups={{0,1}}, to_apply=%add
+  %ard = f32[128,256] all-reduce-done(%ars)
+  %ag = f32[64,128] all-gather(%a), replica_groups={}, dimensions={0}
+  ROOT %r = f32[2] copy(%a)
+}
+"""
+    res = weighted_collectives(hlo)
+    # all-reduce-start: one copy of the 128x256 payload, not the tuple sum
+    assert res["bytes"]["all-reduce"] == 128 * 256 * 4
+    assert res["counts"]["all-reduce"] == 1  # -done is not a second op
+    # empty replica_groups: group = num_partitions = 8
+    assert res["bytes"]["all-gather"] == 64 * 128 * 4 / 8
+
+
 def test_batch_and_cache_specs():
     mesh = fake_mesh()
     batch = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
