@@ -20,25 +20,55 @@ from repro.fl import build_experiment, run_policy
 POLICIES = ("qccf", "no_quant", "channel_allocate", "principle_24", "same_size_26")
 
 
+def _warm_jits(exp) -> None:
+    """Compile the eval and the (loss_fn, tau)-static local-SGD trainer
+    before any timed region starts (their first-call compiles would
+    otherwise land inside the round-loop wall time)."""
+    import jax.numpy as jnp
+
+    from repro.fl.client import _local_sgd
+
+    exp.eval_fn(exp.params)
+    c0 = exp.clients[0]
+    dummy = {
+        "x": jnp.zeros((exp.sysp.tau, c0.batch_size) + c0.data["x"].shape[1:],
+                       jnp.float32),
+        "y": jnp.zeros((exp.sysp.tau, c0.batch_size), jnp.int32),
+    }
+    _local_sgd(c0.loss_fn, exp.sysp.tau, exp.params, dummy, exp.lr)
+
+
 def _run(policy, task, beta, n_rounds, seed=0, v_weight=100.0):
+    """Returns (result, round_wall_s, setup_wall_s).
+
+    ``round_wall_s`` covers ONLY ``exp.run`` (the communication rounds);
+    experiment assembly (datasets, GA setup) and the jit warmups (eval and
+    the tau-step local-SGD trainer) are measured separately so us_per_call
+    is not inflated by one-time costs.
+    """
     t0 = time.time()
     exp = build_experiment(policy, task=task, beta=beta, seed=seed,
                            v_weight=v_weight)
+    _warm_jits(exp)
+    setup = time.time() - t0
+    t0 = time.time()
     res = exp.run(n_rounds, eval_every=max(n_rounds // 10, 1))
     wall = time.time() - t0
-    return res, wall
+    return res, wall, setup
 
 
 def bench_v_tradeoff(task: str = "tiny", n_rounds: int = 12) -> list[tuple]:
     """Fig. 2: accuracy and energy both fall as V rises."""
     rows = []
     for v in (1.0, 10.0, 100.0, 1000.0):
-        res, wall = _run("qccf", task, beta=150.0, n_rounds=n_rounds, v_weight=v)
+        res, wall, setup = _run("qccf", task, beta=150.0, n_rounds=n_rounds,
+                                v_weight=v)
         s = res.summary()
         rows.append((
             f"fig2_v_tradeoff[V={v:g}]",
             wall / n_rounds * 1e6,
-            f"acc={s['final_accuracy']:.3f};energy_J={s['total_energy_J']:.5f}",
+            f"acc={s['final_accuracy']:.3f};energy_J={s['total_energy_J']:.5f}"
+            f";setup_s={setup:.2f}",
         ))
     return rows
 
@@ -50,13 +80,14 @@ def bench_task(task: str, betas=(150.0, 300.0), n_rounds: int = 20,
     for beta in betas:
         energies = {}
         for pol in policies:
-            res, wall = _run(pol, task, beta=beta, n_rounds=n_rounds)
+            res, wall, setup = _run(pol, task, beta=beta, n_rounds=n_rounds)
             s = res.summary()
             energies[pol] = s["total_energy_J"]
             rows.append((
                 f"fig_{task}[{pol},beta={beta:g}]",
                 wall / n_rounds * 1e6,
-                f"acc={s['final_accuracy']:.3f};energy_J={s['total_energy_J']:.5f}",
+                f"acc={s['final_accuracy']:.3f};energy_J={s['total_energy_J']:.5f}"
+                f";setup_s={setup:.2f}",
             ))
         # headline reductions vs the two adaptive baselines (paper: 48.21% / 35.42%)
         for ref in ("principle_24", "same_size_26"):
@@ -79,6 +110,7 @@ def bench_quant_levels(task: str = "femnist", n_rounds: int = 10) -> list[tuple]
     for pol in ("qccf", "channel_allocate", "same_size_26", "principle_24"):
         exp = build_experiment(pol, task=task, beta=300.0, seed=7)
         d = np.array([c.d_size for c in exp.clients], dtype=np.float64)
+        _warm_jits(exp)
         t0 = time.time()
         res = exp.run(n_rounds, eval_every=n_rounds)
         wall = time.time() - t0

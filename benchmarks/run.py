@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig4   — CIFAR-proxy accuracy/energy vs baselines    [paper Fig. 4]
   fig5   — quantization level vs rounds / dataset size [paper Fig. 5]
   kernels— Pallas quant/dequant/aggregate microbench   [Table I payload path]
+  sim    — compiled fleet simulator rounds/sec         [repro.sim scan path]
   roofline — per (arch x shape) dry-run terms          [§Roofline]
 
 Full-scale variants (paper-size rounds/tasks) are available by calling the
@@ -70,7 +71,13 @@ def main() -> None:
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}", flush=True)
 
+    from benchmarks import sim_benchmarks as simb
+
     emit(bench_kernels())
+    # CPU-sized fleet rows; the 1024-client scale run is
+    #   PYTHONPATH=src python benchmarks/sim_benchmarks.py --clients 1024
+    emit(simb.bench_fleet_scale(u=64, n_rounds=10, batch_size=8))
+    emit(simb.bench_sim_vs_object(u=8, n_rounds=10))
     emit(flb.bench_v_tradeoff(task="tiny", n_rounds=10))
     emit(flb.bench_task("femnist", betas=(300.0,), n_rounds=6))
     emit(flb.bench_task("tiny", betas=(150.0, 300.0), n_rounds=12))

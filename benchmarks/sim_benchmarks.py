@@ -1,0 +1,132 @@
+"""Fleet-scale benchmarks for the compiled simulator (repro.sim).
+
+The headline entry runs U = 1024 clients for >= 20 QCCF rounds through the
+single jitted ``lax.scan`` — one compile, no per-client Python objects —
+and reports rounds/sec with compile time split out:
+
+    PYTHONPATH=src python benchmarks/sim_benchmarks.py --clients 1024 --rounds 20
+
+``--dry-run`` traces + lowers the full scan without executing (the CI
+manual-dispatch job uses this: lowering success is the gate, no CPU burn).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+def bench_fleet_scale(
+    u: int = 1024,
+    n_rounds: int = 20,
+    task: str = "tiny",
+    mu: float = 100.0,
+    beta: float = 20.0,
+    batch_size: int = 8,
+    seed: int = 0,
+    dry_run: bool = False,
+    with_eval: bool = False,
+) -> list[tuple]:
+    """U-client QCCF rounds in one compiled scan; rows are run.py-style CSV."""
+    import jax
+    from repro.sim import build_sim
+
+    rows = []
+    t0 = time.time()
+    sim = build_sim(
+        task, n_clients=u, mu=mu, beta=beta, seed=seed,
+        batch_size=batch_size, n_test=256,
+    )
+    build_s = time.time() - t0
+    rows.append((
+        f"sim_build[U={u},{task}]", build_s * 1e6,
+        f"z={sim.z};aggregator={sim.aggregator};n_max={int(sim.fleet.x.shape[1])}",
+    ))
+
+    keys = jax.random.split(jax.random.PRNGKey(sim.seed + 1), n_rounds)
+    carry = sim._init_carry()
+    t0 = time.time()
+    lowered = sim._scan_fn(with_eval).lower(carry, keys)
+    lower_s = time.time() - t0
+    rows.append((f"sim_lower[U={u},rounds={n_rounds}]", lower_s * 1e6,
+                 f"hlo_bytes={len(lowered.as_text())}"))
+    if dry_run:
+        rows.append((f"sim_dryrun[U={u},rounds={n_rounds}]", 0.0, "lowered=ok"))
+        return rows
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    rows.append((f"sim_compile[U={u},rounds={n_rounds}]", compile_s * 1e6, "one_compile"))
+
+    t0 = time.time()
+    (flat, *_), out = compiled(carry, keys)
+    jax.block_until_ready(flat)
+    run_s = time.time() - t0
+    import numpy as np
+
+    n_sched = np.asarray(out["n_scheduled"])
+    qs = np.asarray(out["q_levels"])
+    mean_q = float(qs[qs > 0].mean()) if (qs > 0).any() else 0.0
+    rows.append((
+        f"sim_fleet[U={u},rounds={n_rounds}]",
+        run_s / n_rounds * 1e6,
+        f"rounds_per_s={n_rounds / run_s:.3f};mean_sched={n_sched.mean():.1f}"
+        f";mean_q={mean_q:.2f};energy_J={float(np.asarray(out['energy']).sum()):.5f}",
+    ))
+    return rows
+
+
+def bench_sim_vs_object(u: int = 8, n_rounds: int = 10) -> list[tuple]:
+    """Small-scale sanity row: compiled engine vs the object-based loop
+    running the same greedy-KKT policy (see tests/test_sim_parity.py)."""
+    from repro.fl.experiment import build_experiment
+    from repro.sim import build_sim
+    from repro.sim.policy import HostFastPolicy
+
+    sim = build_sim("tiny", n_clients=u, seed=0, n_test=256)
+    t0 = time.time()
+    res = sim.run_compiled(n_rounds, with_eval=False)
+    sim_s = time.time() - t0  # includes the one compile
+
+    exp = build_experiment("qccf", task="tiny", n_clients=u, n_channels=u, seed=0)
+    exp.policy = HostFastPolicy(sim.sysp, sim.eps1, sim.eps2, sim.v_weight, q_cap=8)
+    exp.eval_fn(exp.params)
+    t0 = time.time()
+    exp.run(n_rounds, eval_every=n_rounds)
+    obj_s = time.time() - t0
+    return [(
+        f"sim_vs_object[U={u},rounds={n_rounds}]",
+        sim_s / n_rounds * 1e6,
+        f"object_us_per_round={obj_s / n_rounds * 1e6:.0f}"
+        f";mean_sched={res.n_scheduled.mean():.1f}",
+    )]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=1024)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--task", default="tiny")
+    ap.add_argument("--mu", type=float, default=100.0)
+    ap.add_argument("--beta", type=float, default=20.0)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--eval", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived", flush=True)
+    rows = bench_fleet_scale(
+        u=args.clients, n_rounds=args.rounds, task=args.task, mu=args.mu,
+        beta=args.beta, batch_size=args.batch_size, seed=args.seed,
+        dry_run=args.dry_run, with_eval=args.eval,
+    )
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -120,7 +120,14 @@ def q_max_feasible(env: ClientEnv) -> float:
 
 
 def _g(env: ClientEnv, q: float) -> float:
-    """G(q) = 2^q ln2 lam w L theta_max^2 / (4 (2^q-1)^3)."""
+    """G(q) = 2^q ln2 lam w L theta_max^2 / (4 (2^q-1)^3).
+
+    G ~ 2^{-2q} for large q, so short-circuit to 0 well before ``2.0**q``
+    overflows Python floats (small-Z models with fast channels reach
+    q_pin in the hundreds in Cases 3/4).
+    """
+    if q > 128.0:
+        return 0.0
     y = 2.0**q
     return y * LN2 * env.lam * env.w * env.lipschitz * env.theta_max**2 / (
         4.0 * (y - 1.0) ** 3

@@ -11,12 +11,13 @@ import numpy as np
 Pytree = Any
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _local_sgd(loss_fn, tau: int, params: Pytree, batches: dict, lr) -> tuple[Pytree, jax.Array, jax.Array]:
-    """tau SGD steps over pre-stacked minibatches (leading axis tau).
+def sgd_scan_body(loss_fn, lr):
+    """The per-step scan body of tau-step local SGD.
 
-    Returns (new_params, mean grad-norm^2 estimate, per-step grad variance
-    proxy) — the latter two feed the controller's G_i / sigma_i estimators.
+    Shared between the per-object client below and the stacked fleet
+    simulator (``repro.sim.fleet``), so both execute the *same* update rule:
+    carry is ``(params, grad_norm_sq_accumulator)``, per-step output is
+    ``(loss, grad_norm_sq)``.
     """
 
     def step(carry, batch):
@@ -26,6 +27,17 @@ def _local_sgd(loss_fn, tau: int, params: Pytree, batches: dict, lr) -> tuple[Py
         p = jax.tree_util.tree_map(lambda w, g: w - lr * g, p, grads)
         return (p, gsq_acc + gsq), (loss, gsq)
 
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _local_sgd(loss_fn, tau: int, params: Pytree, batches: dict, lr) -> tuple[Pytree, jax.Array, jax.Array]:
+    """tau SGD steps over pre-stacked minibatches (leading axis tau).
+
+    Returns (new_params, mean grad-norm^2 estimate, per-step grad variance
+    proxy) — the latter two feed the controller's G_i / sigma_i estimators.
+    """
+    step = sgd_scan_body(loss_fn, lr)
     (params, gsq_acc), (losses, gsqs) = jax.lax.scan(step, (params, 0.0), batches)
     g_mean = gsq_acc / tau
     g_var = jnp.var(gsqs)

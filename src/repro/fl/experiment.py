@@ -70,11 +70,7 @@ def build_experiment(
 
     @jax.jit
     def _eval(p):
-        logits = cnn.forward(cnn_cfg, p, test_j["x"])
-        logz = jax.nn.logsumexp(logits, axis=-1)
-        gold = jnp.take_along_axis(logits, test_j["y"][:, None], axis=-1)[:, 0]
-        acc = jnp.mean((jnp.argmax(logits, -1) == test_j["y"]).astype(jnp.float32))
-        return acc, jnp.mean(logz - gold)
+        return cnn.eval_metrics(cnn_cfg, p, test_j["x"], test_j["y"])
 
     def eval_fn(p):
         acc, loss = _eval(p)

@@ -113,6 +113,18 @@ def loss_fn(cfg: CNNConfig, params: dict, batch: dict) -> jax.Array:
     return jnp.mean(logz - gold)
 
 
+def eval_metrics(cfg: CNNConfig, params: dict, x: jax.Array, y: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """(accuracy, mean cross-entropy) on a labelled set — the shared eval
+    used by both the object-based experiment and the compiled simulator,
+    so their parity comparisons measure the same metric by construction."""
+    logits = forward(cfg, params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return acc, jnp.mean(logz - gold)
+
+
 def accuracy(cfg: CNNConfig, params: dict, batch: dict) -> jax.Array:
     logits = forward(cfg, params, batch["x"])
     return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))

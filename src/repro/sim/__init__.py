@@ -1,0 +1,17 @@
+"""repro.sim — compiled fleet simulator for 1000+-client QCCF rounds.
+
+See README.md in this directory for the state layout, masking rules, and
+the fast-path-vs-GA-fallback policy split.
+"""
+from repro.sim.channel import SimChannel, drop_clients
+from repro.sim.engine import FleetSim, SimResult, build_sim
+from repro.sim.fleet import Fleet, build_fleet, ema_update, fleet_local_sgd
+from repro.sim.policy import FastDecision, HostFastPolicy, decide, decide_host, greedy_assign, greedy_assign_host, solve_kkt
+
+__all__ = [
+    "SimChannel", "drop_clients",
+    "FleetSim", "SimResult", "build_sim",
+    "Fleet", "build_fleet", "ema_update", "fleet_local_sgd",
+    "FastDecision", "HostFastPolicy", "decide", "decide_host", "greedy_assign",
+    "greedy_assign_host", "solve_kkt",
+]

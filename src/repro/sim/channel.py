@@ -1,0 +1,79 @@
+"""``jax.random``-native port of :class:`repro.wireless.channel.ChannelModel`.
+
+The numpy model draws per-round (U, C) Rician gains and Shannon rates on the
+host, which forces a device round-trip every round. This port evaluates the
+same physics — (K, zeta) Rician small-scale fading, 3GPP TR 38.901 UMa-style
+log-distance path loss, ``v = B log2(1 + p h / (B N0))`` — as traced jnp ops
+on a PRNG key, so the whole experiment scan (``repro.sim.engine``) compiles
+rate draws into the round body.
+
+The static client drop (distances) stays host-side setup: pass either a
+numpy ``ChannelModel`` (to share its drop exactly, for parity runs) or a key.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.wireless.channel import ChannelModel, ChannelParams
+
+
+def drop_clients(key: jax.Array, params: ChannelParams) -> jax.Array:
+    """Uniform drop in a ``radius_m`` disc; (U,) distances, near-field floored."""
+    u = jax.random.uniform(key, (params.n_clients,))
+    r = params.radius_m * jnp.sqrt(u)
+    return jnp.maximum(r, 10.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimChannel:
+    """Frozen channel geometry + params; per-round draws are pure functions."""
+
+    params: ChannelParams
+    distances: jax.Array  # (U,) static client drop
+
+    @classmethod
+    def from_key(cls, key: jax.Array, params: ChannelParams) -> "SimChannel":
+        return cls(params=params, distances=drop_clients(key, params))
+
+    @classmethod
+    def from_host_model(cls, model: ChannelModel) -> "SimChannel":
+        """Share the numpy model's client drop (exact same large-scale fading)."""
+        return cls(params=model.params,
+                   distances=jnp.asarray(model.distances, jnp.float32))
+
+    def path_loss_db(self) -> jax.Array:
+        p = self.params
+        return (
+            28.0
+            + 22.0 * jnp.log10(self.distances)
+            + 20.0 * jnp.log10(jnp.float32(p.carrier_ghz))
+        )
+
+    def large_scale(self) -> jax.Array:
+        """(U,) linear large-scale power gain (path loss + antenna gain)."""
+        db = -self.path_loss_db() + self.params.antenna_gain_db
+        return 10.0 ** (db / 10.0)
+
+    def draw_gains(self, key: jax.Array) -> jax.Array:
+        """(U, C) linear power gains h_{i,c} for one round (traceable)."""
+        p = self.params
+        k, zeta = p.rician_k, p.rician_zeta
+        los = np.sqrt(k / (k + 1.0) * zeta)
+        nlos_std = np.sqrt(zeta / (2.0 * (k + 1.0)))
+        shape = (p.n_clients, p.n_channels)
+        kx, ky = jax.random.split(key)
+        x = los + nlos_std * jax.random.normal(kx, shape)
+        y = nlos_std * jax.random.normal(ky, shape)
+        small_scale = x**2 + y**2
+        return small_scale * self.large_scale()[:, None]
+
+    def draw_rates(self, key: jax.Array) -> jax.Array:
+        """(U, C) achievable uplink rates [bit/s] for one round (eq. 14)."""
+        p = self.params
+        gains = self.draw_gains(key)
+        snr = p.p_tx * gains / p.noise_power
+        return p.bandwidth * jnp.log2(1.0 + snr)

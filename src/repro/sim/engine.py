@@ -1,0 +1,477 @@
+"""The compiled fleet simulator: a whole FL experiment as one lax.scan.
+
+``build_sim`` mirrors ``repro.fl.experiment.build_experiment`` setup (same
+synthetic datasets, same client drop, same eps1/eps2 calibration, same
+initial model for a given seed), then ``FleetSim.run_compiled`` executes
+every round inside a single jitted ``lax.scan``:
+
+  decision   — compiled greedy + vectorized KKT (``repro.sim.policy``)
+  channel    — traced Rician/UMa rate draws (``repro.sim.channel``)
+  local work — vmapped tau-step SGD for all U clients (``repro.sim.fleet``)
+  aggregate  — masked quantize -> wire format -> fused dequant+weighted-sum
+               through the Pallas kernel (``repro.kernels.stochastic_quant``)
+               or a shape-identical dense einsum for huge fleets
+  queues     — Lyapunov lambda1/lambda2 updates carried in the scan state
+
+No per-client Python objects exist at run time: the fleet is four stacked
+arrays and the decision/energy/latency bookkeeping is all (U,)-vectorized.
+``run_host_policy`` is the per-round fallback engine that lets the host-side
+GA controller (``QCCFController``) or any ``repro.fl`` Policy drive the same
+compiled round execution when the closed-form fast path is not wanted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core.genetic import RoundContext, SystemParams
+from repro.data.synthetic import SyntheticImageTask, gaussian_sizes, make_federated_datasets, make_test_set
+from repro.fl.trainer import ExperimentResult, RoundRecord
+from repro.kernels import stochastic_quant as sq
+from repro.models import cnn
+from repro.sim import policy as fast_policy
+from repro.sim.channel import SimChannel
+from repro.sim.fleet import Fleet, build_fleet, ema_update, fleet_local_sgd
+from repro.wireless.channel import ChannelModel, ChannelParams
+
+Pytree = Any
+LANES = sq.LANES
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Stacked per-round arrays — the RoundRecord columns, (N,...)-shaped."""
+
+    name: str
+    energy: np.ndarray        # (N,)
+    accuracy: np.ndarray      # (N,)
+    loss: np.ndarray          # (N,)
+    n_scheduled: np.ndarray   # (N,)
+    q_levels: np.ndarray      # (N, U)
+    latency: np.ndarray       # (N,)
+    payload_bits: np.ndarray  # (N,)
+    rates: np.ndarray         # (N, U) assigned uplink rates
+    lambda1: np.ndarray       # (N,)
+    lambda2: np.ndarray       # (N,)
+
+    @property
+    def cum_energy(self) -> np.ndarray:
+        return np.cumsum(self.energy)
+
+    def to_result(self) -> ExperimentResult:
+        """Adapt to the object-based ``ExperimentResult`` API."""
+        cum = self.cum_energy
+        records = [
+            RoundRecord(
+                round=n,
+                energy=float(self.energy[n]),
+                cum_energy=float(cum[n]),
+                accuracy=float(self.accuracy[n]),
+                loss=float(self.loss[n]),
+                n_scheduled=int(self.n_scheduled[n]),
+                q_levels=self.q_levels[n].copy(),
+                latency=float(self.latency[n]),
+                payload_bits=float(self.payload_bits[n]),
+                rates=self.rates[n].copy(),
+            )
+            for n in range(len(self.energy))
+        ]
+        return ExperimentResult(self.name, records)
+
+
+def _pad_len(z: int, block_m: int) -> int:
+    tile = block_m * LANES
+    return ((z + tile - 1) // tile) * tile
+
+
+def _quantize_wire(key: jax.Array, flat_u: jax.Array, q: jax.Array, q_cap: int):
+    """(U, Z) params + per-client traced q -> wire format (idx, sign, theta).
+
+    Same stochastic rounding as ``core.quantization.quantize_indices`` but
+    vectorized over the client axis with a traced per-client level; the
+    index plane dtype is sized statically from ``q_cap``.
+    """
+    theta = jnp.max(jnp.abs(flat_u), axis=1)                     # (U,)
+    safe = jnp.where(theta > 0, theta, 1.0)
+    levels = 2.0 ** jnp.maximum(q, 1).astype(jnp.float32) - 1.0  # (U,)
+    scaled = jnp.abs(flat_u) * (levels / safe)[:, None]
+    lower = jnp.floor(scaled)
+    frac = scaled - lower
+    u01 = jax.random.uniform(key, flat_u.shape, jnp.float32)
+    idx = jnp.minimum(lower + (u01 < frac).astype(jnp.float32), levels[:, None])
+    dtype = jnp.uint8 if q_cap <= 8 else jnp.uint16
+    return idx.astype(dtype), (flat_u < 0).astype(jnp.uint8), theta
+
+
+class FleetSim:
+    """Holds the static setup; ``run_compiled`` is the one-scan experiment."""
+
+    def __init__(
+        self,
+        fleet: Fleet,
+        init_params: Pytree,
+        loss_fn,
+        eval_fn,                    # traced (flat_params) -> (acc, loss)
+        channel: SimChannel,
+        sysp: SystemParams,
+        *,
+        eps1: float,
+        eps2: float,
+        v_weight: float = 100.0,
+        lr: float = 0.05,
+        batch_size: int = 32,
+        q_cap: int = 8,
+        aggregator: str = "auto",   # "pallas" | "dense" | "auto"
+        block_m: int = 64,
+        seed: int = 0,
+        host_channel: Optional[ChannelModel] = None,
+        name: str = "sim_qccf",
+    ) -> None:
+        flat0, unravel = ravel_pytree(init_params)
+        self.flat0 = flat0.astype(jnp.float32)
+        self.unravel = unravel
+        self.z = int(flat0.shape[0])
+        self.fleet = fleet
+        self.loss_fn = loss_fn
+        self.eval_fn = eval_fn
+        self.channel = channel
+        self.sysp = sysp
+        self.eps1, self.eps2 = float(eps1), float(eps2)
+        self.v_weight = float(v_weight)
+        self.lr = float(lr)
+        self.batch_size = int(batch_size)
+        self.q_cap = int(q_cap)
+        if aggregator == "auto":
+            # The fused kernel unrolls the client axis statically (built for
+            # the paper's K <= ~32 uplink); huge fleets take the dense
+            # einsum, which computes the identical masked weighted sum.
+            aggregator = "pallas" if fleet.n_clients <= 32 else "dense"
+        assert aggregator in ("pallas", "dense"), aggregator
+        self.aggregator = aggregator
+        self.block_m = int(block_m)
+        self.seed = int(seed)
+        self.host_channel = host_channel
+        self.name = name
+        self._compiled: dict = {}
+
+    # ------------------------------------------------------------ round body
+
+    def _aggregate(self, idx, signs, theta, w_round, q):
+        """Masked eq.-2 aggregation over the wire planes -> (Zpad,) fp32."""
+        zpad = _pad_len(self.z, self.block_m)
+        pad = zpad - self.z
+        idx = jnp.pad(idx, ((0, 0), (0, pad)))
+        signs = jnp.pad(signs, ((0, 0), (0, pad)))
+        if self.aggregator == "pallas":
+            u = idx.shape[0]
+            out = sq.aggregate(
+                idx.reshape(u, -1, LANES),
+                signs.reshape(u, -1, LANES),
+                theta,
+                w_round,
+                jnp.maximum(q, 1),
+                block_m=self.block_m,
+            )
+            return out.reshape(-1)
+        levels = 2.0 ** jnp.maximum(q, 1).astype(jnp.float32) - 1.0
+        coef = w_round * theta / levels                      # (U,)
+        mag = idx.astype(jnp.float32)
+        signed = jnp.where(signs > 0, -mag, mag)
+        return jnp.einsum("uz,u->z", signed, coef)
+
+    def _round_body(self, carry, key, with_eval: bool):
+        flat, g_sq, sigma_sq, theta_max, lam1, lam2 = carry
+        k_ch, k_batch, k_quant = jax.random.split(key, 3)
+        sysp, z = self.sysp, self.z
+
+        rates = self.channel.draw_rates(k_ch)
+        g_n = g_sq / jnp.maximum(jnp.mean(g_sq), 1e-12)
+        s_n = sigma_sq / jnp.maximum(jnp.mean(sigma_sq), 1e-12)
+        d_sizes = self.fleet.n_samples.astype(jnp.float32)
+        dec = fast_policy.decide(
+            rates, d_sizes, g_n, s_n, theta_max, lam2, sysp, z,
+            self.v_weight, q_cap=self.q_cap,
+        )
+        af = dec.a.astype(jnp.float32)
+
+        params = self.unravel(flat)
+        stacked, g_obs, s_obs = fleet_local_sgd(
+            self.loss_fn, sysp.tau, self.batch_size, params,
+            self.fleet.x, self.fleet.y, self.fleet.n_samples, self.lr, k_batch,
+        )
+        flat_u = jax.vmap(lambda p: ravel_pytree(p)[0])(stacked)  # (U, Z)
+
+        idx, signs, theta = _quantize_wire(k_quant, flat_u, dec.q, self.q_cap)
+        d_n = jnp.sum(af * d_sizes)
+        w_round = jnp.where(dec.a > 0, af * d_sizes / jnp.maximum(d_n, 1e-12), 0.0)
+        agg = self._aggregate(idx, signs, theta, w_round, dec.q)
+        new_flat = jnp.where(d_n > 0, agg[: self.z], flat)
+
+        g_sq = ema_update(g_sq, g_obs, dec.a)
+        sigma_sq = ema_update(sigma_sq, s_obs, dec.a, floor=1e-8)
+        theta_max = jnp.where(dec.a > 0, theta, theta_max)
+        lam1 = jnp.maximum(lam1 + dec.data_term - self.eps1, 0.0)
+        lam2 = jnp.maximum(lam2 + dec.quant_term - self.eps2, 0.0)
+
+        if with_eval:
+            acc, loss = self.eval_fn(new_flat)
+        else:
+            acc, loss = jnp.float32(0.0), jnp.float32(0.0)
+        out = {
+            "energy": jnp.sum(dec.energy),
+            "accuracy": acc,
+            "loss": loss,
+            "n_scheduled": jnp.sum(dec.a),
+            "q_levels": dec.q,
+            "latency": jnp.max(dec.latency),
+            "payload_bits": dec.payload_bits,
+            "rates": dec.v_assigned,
+            "lambda1": lam1,
+            "lambda2": lam2,
+        }
+        return (new_flat, g_sq, sigma_sq, theta_max, lam1, lam2), out
+
+    # ---------------------------------------------------------------- runs
+
+    def _init_carry(self):
+        u = self.fleet.n_clients
+        return (
+            self.flat0,
+            jnp.ones((u,), jnp.float32),
+            jnp.ones((u,), jnp.float32),
+            jnp.ones((u,), jnp.float32),
+            jnp.float32(0.0),
+            jnp.float32(0.0),
+        )
+
+    def _scan_fn(self, with_eval: bool):
+        def run(carry, keys):
+            body = functools.partial(self._round_body, with_eval=with_eval)
+            return jax.lax.scan(body, carry, keys)
+
+        return jax.jit(run)
+
+    def lower(self, n_rounds: int, with_eval: bool = False):
+        """Trace + lower the full n_rounds scan without executing (dry run)."""
+        keys = jax.random.split(jax.random.PRNGKey(self.seed + 1), n_rounds)
+        return self._scan_fn(with_eval).lower(self._init_carry(), keys)
+
+    def run_compiled(self, n_rounds: int, with_eval: bool = True) -> SimResult:
+        """The tentpole path: every round traced into one jitted scan."""
+        fn = self._compiled.get(with_eval)
+        if fn is None:
+            fn = self._compiled[with_eval] = self._scan_fn(with_eval)
+        keys = jax.random.split(jax.random.PRNGKey(self.seed + 1), n_rounds)
+        (flat, *_rest), out = fn(self._init_carry(), keys)
+        self.final_flat = flat
+        return SimResult(
+            name=self.name,
+            energy=np.asarray(out["energy"], np.float64),
+            accuracy=np.asarray(out["accuracy"], np.float64),
+            loss=np.asarray(out["loss"], np.float64),
+            n_scheduled=np.asarray(out["n_scheduled"]),
+            q_levels=np.asarray(out["q_levels"]),
+            latency=np.asarray(out["latency"], np.float64),
+            payload_bits=np.asarray(out["payload_bits"], np.float64),
+            rates=np.asarray(out["rates"], np.float64),
+            lambda1=np.asarray(out["lambda1"], np.float64),
+            lambda2=np.asarray(out["lambda2"], np.float64),
+        )
+
+    # ------------------------------------------------- host-policy fallback
+
+    def _exec_fn(self):
+        """One compiled round execution for externally supplied decisions."""
+
+        @jax.jit
+        def exec_round(flat, a, q, w_round, key):
+            # identical key discipline to _round_body (k_ch unused: the
+            # caller already drew the rates), so a host policy replaying the
+            # compiled policy's decisions reproduces the scan bit-for-bit
+            _k_ch, k_batch, k_quant = jax.random.split(key, 3)
+            params = self.unravel(flat)
+            stacked, g_obs, s_obs = fleet_local_sgd(
+                self.loss_fn, self.sysp.tau, self.batch_size, params,
+                self.fleet.x, self.fleet.y, self.fleet.n_samples, self.lr,
+                k_batch,
+            )
+            flat_u = jax.vmap(lambda p: ravel_pytree(p)[0])(stacked)
+            idx, signs, theta = _quantize_wire(k_quant, flat_u, q, self.q_cap)
+            agg = self._aggregate(idx, signs, theta, w_round, q)
+            new_flat = jnp.where(jnp.sum(w_round) > 0, agg[: self.z], flat)
+            acc, loss = self.eval_fn(new_flat)
+            return new_flat, g_obs, s_obs, theta, acc, loss
+
+        return exec_round
+
+    def run_host_policy(self, policy, n_rounds: int,
+                        channel: str = "sim") -> ExperimentResult:
+        """Per-round Python fallback: a host Policy (e.g. the GA-backed
+        ``QCCFController`` via ``repro.fl.baselines.QCCFPolicy``) makes the
+        decisions; training/quantize/aggregate still run compiled.
+
+        ``channel="sim"`` draws rates from the jnp channel on the SAME key
+        schedule as ``run_compiled`` — a host policy that mirrors the
+        compiled fast path then reproduces the scan decision-for-decision.
+        ``channel="host"`` uses the paired numpy ``ChannelModel`` stream
+        instead (what ``FLExperiment`` would see).
+
+        The wire format is sized for ``q_cap`` levels, so decisions above it
+        are clamped to ``q_cap`` for execution and in the records (build the
+        sim with ``q_cap=16`` for baselines that quantize up to 16 bits).
+        """
+        assert channel in ("sim", "host")
+        if channel == "host":
+            assert self.host_channel is not None, "build with a host ChannelModel"
+        exec_round = self._exec_fn()
+        u = self.fleet.n_clients
+        d_sizes = self.fleet.d_sizes.astype(np.float64)
+        g_sq = np.ones(u)
+        sigma_sq = np.ones(u)
+        theta_max = np.ones(u)
+        keys = jax.random.split(jax.random.PRNGKey(self.seed + 1), n_rounds)
+        flat = self.flat0
+        records: list[RoundRecord] = []
+        cum = 0.0
+        for n in range(n_rounds):
+            if channel == "sim":
+                k_ch = jax.random.split(keys[n], 3)[0]
+                rates = np.asarray(self.channel.draw_rates(k_ch), np.float64)
+            else:
+                rates = self.host_channel.draw_rates()
+            ctx = RoundContext(
+                rates=rates,
+                d_sizes=d_sizes,
+                g_sq=g_sq / max(float(np.mean(g_sq)), 1e-12),
+                sigma_sq=sigma_sq / max(float(np.mean(sigma_sq)), 1e-12),
+                theta_max=theta_max.copy(),
+                z=self.z,
+            )
+            dec = policy.decide(ctx)
+            d_n = float(np.sum(dec.a * d_sizes))
+            w_round = np.where(dec.a > 0, dec.a * d_sizes / max(d_n, 1e-12), 0.0)
+            # clamp into the wire format: a uint8/uint16 index plane sized
+            # for q_cap would silently wrap above it
+            q_exec = np.clip(dec.q, 1, self.q_cap) * dec.a
+            dec.q = np.where(dec.a > 0, q_exec, dec.q * 0)
+            q_arr = jnp.asarray(q_exec, jnp.int32)
+            flat, g_obs, s_obs, theta, acc, loss = exec_round(
+                flat, jnp.asarray(dec.a, jnp.int32), q_arr,
+                jnp.asarray(w_round, jnp.float32), keys[n],
+            )
+            sched = dec.a.astype(bool)
+            g_sq[sched] = 0.7 * g_sq[sched] + 0.3 * np.asarray(g_obs)[sched]
+            sigma_sq[sched] = 0.7 * sigma_sq[sched] + 0.3 * np.maximum(
+                np.asarray(s_obs)[sched], 1e-8
+            )
+            theta_max[sched] = np.asarray(theta)[sched]
+            policy.commit(dec)
+            cum += dec.total_energy
+            v_assigned = np.zeros(u)
+            for c, cid in enumerate(dec.assign):
+                if cid >= 0:
+                    v_assigned[cid] += float(ctx.rates[cid, c])
+            records.append(RoundRecord(
+                round=n, energy=dec.total_energy, cum_energy=cum,
+                accuracy=float(acc), loss=float(loss),
+                n_scheduled=int(dec.a.sum()), q_levels=dec.q.copy(),
+                latency=float(dec.latency.max() if dec.a.any() else 0.0),
+                payload_bits=float(np.sum(
+                    np.where(dec.a > 0, self.z * np.maximum(dec.q, 1)
+                             + self.z + 32.0, 0.0))),
+                rates=v_assigned,
+            ))
+        self.final_flat = flat
+        return ExperimentResult(getattr(policy, "name", "host_policy"), records)
+
+    # -------------------------------------------------------------- sharding
+
+    def shard_clients(self, mesh, axis: str = "data") -> None:
+        """Distribute the client axis over a mesh axis via the repro.dist
+        rule table (divisibility-gated); computation follows the data."""
+        from repro.dist import sharding as shd
+
+        batch = {"x": self.fleet.x, "y": self.fleet.y, "n": self.fleet.n_samples}
+        specs = shd.batch_specs(mesh, batch, dp_override=(axis,))
+        named = shd.to_named(mesh, specs)
+        placed = {k: jax.device_put(v, named[k]) for k, v in batch.items()}
+        self.fleet = dataclasses.replace(
+            self.fleet, x=placed["x"], y=placed["y"], n_samples=placed["n"],
+        )
+        # cached jitted scans captured the old fleet arrays at trace time
+        self._compiled.clear()
+
+
+# ------------------------------------------------------------------- build
+
+def build_sim(
+    task: str = "tiny",
+    *,
+    n_clients: int = 64,
+    n_channels: Optional[int] = None,
+    mu: float = 1200.0,
+    beta: float = 150.0,
+    v_weight: float = 100.0,
+    alpha_dirichlet: float = 0.5,
+    lr: float = 0.05,
+    seed: int = 0,
+    batch_size: int = 32,
+    q_cap: int = 8,
+    aggregator: str = "auto",
+    block_m: int = 64,
+    n_test: int = 1024,
+    target_q: float = 6.0,
+) -> FleetSim:
+    """Mirror of ``repro.fl.experiment.build_experiment`` for the compiled
+    engine: same task specs, same dataset/draw seeds, same client drop, and
+    eps1/eps2 from the same ``auto_epsilons`` probe, so small-scale runs are
+    directly comparable with the object-based ``FLExperiment``.
+    """
+    from repro.core.controller import auto_epsilons
+    from repro.fl.experiment import TASKS
+
+    task_spec, cnn_cfg, sysp = TASKS[task]
+    if task == "tiny":
+        mu, beta = min(mu, 200.0), min(beta, 40.0)
+    img_task = SyntheticImageTask(task_spec, seed=seed)
+    sizes = gaussian_sizes(n_clients, mu, beta, seed=seed)
+    datasets = make_federated_datasets(img_task, n_clients, sizes,
+                                      alpha=alpha_dirichlet, seed=seed)
+    fleet = build_fleet(datasets)
+    test = make_test_set(img_task, n=n_test, seed=seed + 999)
+    test_x = jnp.asarray(test["x"])
+    test_y = jnp.asarray(test["y"])
+
+    loss_fn = functools.partial(cnn.loss_fn, cnn_cfg)
+    params = cnn.init_params(cnn_cfg, jax.random.PRNGKey(seed))
+    _flat0, unravel = ravel_pytree(params)
+
+    def eval_fn(flat):
+        return cnn.eval_metrics(cnn_cfg, unravel(flat), test_x, test_y)
+
+    n_channels = n_clients if n_channels is None else n_channels
+    host_channel = ChannelModel(
+        ChannelParams(n_clients=n_clients, n_channels=n_channels), seed=seed
+    )
+    channel = SimChannel.from_host_model(host_channel)
+
+    z = int(_flat0.shape[0])
+    probe = RoundContext(
+        rates=host_channel.draw_rates(), d_sizes=sizes.astype(np.float64),
+        g_sq=np.full(n_clients, 1.0), sigma_sq=np.full(n_clients, 1.0),
+        theta_max=np.full(n_clients, 1.0), z=z,
+    )
+    eps1, eps2 = auto_epsilons(probe, sysp, target_q=target_q)
+
+    return FleetSim(
+        fleet, params, loss_fn, eval_fn, channel, sysp,
+        eps1=eps1, eps2=eps2, v_weight=v_weight, lr=lr,
+        batch_size=batch_size, q_cap=q_cap, aggregator=aggregator,
+        block_m=block_m, seed=seed, host_channel=host_channel,
+    )

@@ -1,0 +1,100 @@
+"""Stacked client fleet: padded per-client datasets + vmapped local SGD.
+
+The object-based runtime (`repro.fl`) holds one ``FLClient`` per client and
+dispatches a jitted tau-step SGD per scheduled client per round — a host
+loop that tops out around ten clients. Here the whole fleet lives in four
+arrays (data, labels, per-client sample counts, sizes) padded to a common
+``N_max``; one ``jax.vmap`` of the *same* SGD scan body
+(:func:`repro.fl.client.sgd_scan_body`) trains every client at once, and
+per-client minibatch draws happen with ``jax.random`` inside the trace
+(indices are drawn in ``[0, n_i)`` so padding rows are never sampled).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.client import sgd_scan_body
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Fleet:
+    """All U client datasets as stacked, padded arrays."""
+
+    x: jax.Array          # (U, N_max, H, W, C) fp32
+    y: jax.Array          # (U, N_max) int32
+    n_samples: jax.Array  # (U,) int32 true per-client sizes (mask)
+    d_sizes: np.ndarray   # host copy of n_samples for setup-time math
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.x.shape[0])
+
+
+def build_fleet(datasets: list[dict]) -> Fleet:
+    """Stack ``repro.data.synthetic.make_federated_datasets`` output.
+
+    Clients are padded to the largest local dataset; ``n_samples`` masks the
+    padding (batch indices are drawn modulo the true size, so padded rows
+    are dead weight, never training signal).
+    """
+    sizes = np.array([d["x"].shape[0] for d in datasets], dtype=np.int64)
+    n_max = int(sizes.max())
+    u = len(datasets)
+    xs = np.zeros((u, n_max) + datasets[0]["x"].shape[1:], np.float32)
+    ys = np.zeros((u, n_max), np.int32)
+    for i, d in enumerate(datasets):
+        xs[i, : sizes[i]] = d["x"]
+        ys[i, : sizes[i]] = d["y"]
+    return Fleet(
+        x=jnp.asarray(xs),
+        y=jnp.asarray(ys),
+        n_samples=jnp.asarray(sizes, jnp.int32),
+        d_sizes=sizes,
+    )
+
+
+def fleet_local_sgd(
+    loss_fn: Callable,
+    tau: int,
+    batch_size: int,
+    params: Pytree,
+    fleet_x: jax.Array,
+    fleet_y: jax.Array,
+    n_samples: jax.Array,
+    lr: float,
+    key: jax.Array,
+) -> tuple[Pytree, jax.Array, jax.Array]:
+    """tau local SGD steps for every client at once (paper Fig. 1 step 3).
+
+    Returns ``(stacked_params, g_mean, g_var)`` with a leading U axis on
+    every params leaf; ``g_mean``/``g_var`` are the per-client G_i^2 and
+    sigma_i^2 observations that feed the controller's EMA estimators.
+    """
+    step = sgd_scan_body(loss_fn, lr)
+    u = fleet_x.shape[0]
+
+    def one_client(x, y, n, k):
+        idx = jax.random.randint(k, (tau, batch_size), 0, n)
+        batches = {"x": x[idx], "y": y[idx]}
+        (p, gsq_acc), (_losses, gsqs) = jax.lax.scan(step, (params, 0.0), batches)
+        return p, gsq_acc / tau, jnp.var(gsqs)
+
+    keys = jax.random.split(key, u)
+    return jax.vmap(one_client)(fleet_x, fleet_y, n_samples, keys)
+
+
+def ema_update(
+    ema: jax.Array, obs: jax.Array, a: jax.Array, decay: float = 0.7,
+    floor: float = 0.0,
+) -> jax.Array:
+    """Masked EMA: scheduled clients blend in the new observation, others
+    keep their state (mirrors ``FLExperiment``'s 0.7/0.3 estimators)."""
+    blended = decay * ema + (1.0 - decay) * jnp.maximum(obs, floor)
+    return jnp.where(a > 0, blended, ema)

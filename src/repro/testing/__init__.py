@@ -1,0 +1,1 @@
+"""Test-support utilities vendored with the library (no hard dev deps)."""

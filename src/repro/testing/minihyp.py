@@ -1,0 +1,176 @@
+"""Vendored mini property-test shim with a hypothesis-compatible surface.
+
+``hypothesis`` is an optional dev dependency; without this shim the four
+property-based test modules (`test_kkt`, `test_quantization`, `test_kernels`,
+`test_lyapunov_ga`) skip wholesale in a minimal environment. The shim covers
+exactly the API surface those modules use —
+
+    from hypothesis import given, settings, strategies as st, HealthCheck
+    st.integers(lo, hi), st.floats(lo, hi)
+    @settings(max_examples=N, deadline=None)
+    settings.register_profile / settings.load_profile
+
+— and replaces hypothesis' randomized search with a SMALL DETERMINISTIC
+case-sweep: for each parameter, example 0 is the lower bound, example 1 the
+upper bound, and further examples are drawn from a seeded PRNG keyed on the
+test and parameter names (stable across runs and machines; no shrinking).
+
+Install via :func:`install` (idempotent), which registers the shim under
+``sys.modules["hypothesis"]`` so ``pytest.importorskip("hypothesis")``
+resolves to it. A real hypothesis installation always wins — ``install``
+is a no-op when the genuine package is importable.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import random
+import sys
+import types
+from typing import Any, Callable
+
+# Deterministic sweeps stay small by design: this caps whatever
+# max_examples the test asks for (hypothesis would run 15-30 here).
+MAX_SHIM_EXAMPLES = 8
+
+
+def _seed(*parts: Any) -> int:
+    """Stable cross-process seed (``hash()`` is salted per interpreter)."""
+    digest = hashlib.blake2s(":".join(str(p) for p in parts).encode()).digest()
+    return int.from_bytes(digest[:8], "big")
+
+
+class Strategy:
+    """Base: a deterministic example generator, bounds-first."""
+
+    def example(self, i: int, salt: str) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value: int, max_value: int) -> None:
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example(self, i: int, salt: str) -> int:
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return random.Random(_seed(salt, i, self.lo, self.hi)).randint(self.lo, self.hi)
+
+
+class _Floats(Strategy):
+    def __init__(self, min_value: float, max_value: float) -> None:
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, i: int, salt: str) -> float:
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return random.Random(_seed(salt, i, self.lo, self.hi)).uniform(self.lo, self.hi)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    return _Floats(min_value, max_value)
+
+
+class HealthCheck:
+    """Sentinel namespace; the shim never enforces health checks."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+class settings:
+    """Decorator + profile registry. Only ``max_examples`` is honored."""
+
+    _profiles: dict[str, dict] = {"default": {}}
+    _current: dict = {}
+
+    def __init__(self, max_examples: int | None = None, deadline=None,
+                 suppress_health_check=(), **_ignored) -> None:
+        self.max_examples = max_examples
+
+    def __call__(self, fn: Callable) -> Callable:
+        fn._minihyp_settings = self
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, parent=None, **kwargs) -> None:
+        cls._profiles[name] = dict(kwargs)
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls._current = cls._profiles.get(name, {})
+
+
+def given(*args: Strategy, **param_strategies: Strategy) -> Callable:
+    """Deterministic sweep over the cross-indexed per-parameter examples.
+
+    Only the keyword form used by this repo's tests is supported; each
+    parameter's i-th example is generated independently (bounds first, then
+    seeded draws), so example i is one test call with all parameters at
+    their i-th value.
+    """
+    if args:
+        raise TypeError("minihyp given() supports keyword strategies only")
+
+    def deco(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper() -> None:
+            cfg = getattr(wrapper, "_minihyp_settings", None)
+            asked = getattr(cfg, "max_examples", None) or MAX_SHIM_EXAMPLES
+            n = max(2, min(int(asked), MAX_SHIM_EXAMPLES))
+            for i in range(n):
+                case = {
+                    name: strat.example(i, f"{fn.__module__}.{fn.__qualname__}:{name}")
+                    for name, strat in param_strategies.items()
+                }
+                try:
+                    fn(**case)
+                except Exception as exc:  # surface the failing example
+                    raise AssertionError(
+                        f"minihyp falsifying example #{i}: {case!r}"
+                    ) from exc
+
+        # pytest introspects the signature to inject fixtures; the sweep
+        # wrapper takes no arguments, so hide the wrapped signature.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.is_minihyp = True
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Expose this shim as ``hypothesis`` (+ ``hypothesis.strategies``).
+
+    No-op when the real package is importable or already installed.
+    """
+    if "hypothesis" in sys.modules:
+        return
+    try:
+        import hypothesis  # noqa: F401  (the genuine package wins)
+        return
+    except ModuleNotFoundError:
+        pass
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = "minihyp: vendored deterministic shim (repro.testing.minihyp)"
+    strat = types.ModuleType("hypothesis.strategies")
+    strat.integers = integers
+    strat.floats = floats
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = HealthCheck
+    hyp.strategies = strat
+    hyp.is_minihyp = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -1,4 +1,5 @@
 import os
+import sys
 
 # Smoke tests and benches must see the single real CPU device; the
 # 512-device XLA flag belongs to the dry-run subprocesses ONLY.
@@ -6,17 +7,23 @@ assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS",
     "run pytest without the dry-run XLA_FLAGS"
 )
 
-# hypothesis is an optional dev dependency: the property-based modules
-# importorskip it themselves, and collection of the rest of the suite
-# must survive a minimal environment without it.
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+# hypothesis is an optional dev dependency. When absent, install the vendored
+# deterministic shim (repro.testing.minihyp) so the property-based modules
+# still execute a small case-sweep instead of skipping wholesale; a real
+# hypothesis installation always takes precedence.
 try:
     from hypothesis import HealthCheck, settings
 except ModuleNotFoundError:
-    pass
-else:
-    settings.register_profile(
-        "repro",
-        deadline=None,
-        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-    )
-    settings.load_profile("repro")
+    from repro.testing import minihyp
+
+    minihyp.install()
+    from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro",
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")

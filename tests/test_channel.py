@@ -1,0 +1,85 @@
+"""Direct tests for the numpy wireless channel (Sec. IV-A, Table I).
+
+Covers the three properties the FL results lean on: Rician small-scale
+fading has the right mean power (zeta * large-scale), UMa path loss is
+monotone in distance, and draw_rates is exactly the Shannon formula
+B log2(1 + p h / (B N0)) applied to the drawn gains.
+"""
+import numpy as np
+import pytest
+
+from repro.wireless.channel import ChannelModel, ChannelParams
+
+
+def test_rician_power_gain_mean_tracks_large_scale():
+    """E[|h_rician|^2] = zeta, so E[gain_{i,c}] ~= zeta * large_scale_i."""
+    params = ChannelParams(n_clients=8, n_channels=16)
+    model = ChannelModel(params, seed=3)
+    large_db = -model.path_loss_db() + params.antenna_gain_db
+    large = 10 ** (large_db / 10.0)
+    draws = np.stack([model.draw_gains() for _ in range(600)])  # (N, U, C)
+    mean_small = (draws / large[None, :, None]).mean(axis=(0, 2))  # (U,)
+    # zeta = 1: LOS power K/(K+1) + scatter 1/(K+1) sums to zeta exactly.
+    np.testing.assert_allclose(mean_small, params.rician_zeta, rtol=0.05)
+
+
+def test_rician_zeta_scales_mean_power():
+    base = ChannelModel(ChannelParams(n_clients=4, rician_zeta=1.0), seed=0)
+    hot = ChannelModel(ChannelParams(n_clients=4, rician_zeta=3.0), seed=0)
+    m_base = np.mean([base.draw_gains() for _ in range(400)])
+    m_hot = np.mean([hot.draw_gains() for _ in range(400)])
+    assert m_hot / m_base == pytest.approx(3.0, rel=0.1)
+
+
+def test_path_loss_monotone_in_distance():
+    model = ChannelModel(ChannelParams(n_clients=32), seed=1)
+    order = np.argsort(model.distances)
+    pl = model.path_loss_db()[order]
+    assert np.all(np.diff(pl) >= 0)
+    # and strictly increasing where distances actually differ
+    d = model.distances[order]
+    strict = np.diff(d) > 1e-9
+    assert np.all(np.diff(pl)[strict] > 0)
+
+
+def test_path_loss_matches_uma_formula_at_known_distance():
+    model = ChannelModel(ChannelParams(n_clients=3, carrier_ghz=2.4), seed=0)
+    model.distances = np.array([10.0, 100.0, 500.0])
+    pl = model.path_loss_db()
+    expect = 28.0 + 22.0 * np.log10(model.distances) + 20.0 * np.log10(2.4)
+    np.testing.assert_allclose(pl, expect, rtol=1e-12)
+    # +22 dB per decade of distance
+    assert pl[1] - pl[0] == pytest.approx(22.0, abs=1e-9)
+
+
+def test_draw_rates_is_shannon_of_drawn_gains():
+    """Same seed => same rng stream => rates == B log2(1 + p g / (B N0))."""
+    params = ChannelParams(n_clients=6, n_channels=9)
+    gains = ChannelModel(params, seed=11).draw_gains()
+    rates = ChannelModel(params, seed=11).draw_rates()
+    expect = params.bandwidth * np.log2(
+        1.0 + params.p_tx * gains / params.noise_power
+    )
+    np.testing.assert_allclose(rates, expect, rtol=1e-12)
+
+
+def test_draw_rates_unit_sanity():
+    """Rates are finite, positive, and capped by a sane spectral efficiency:
+    v / B = log2(1 + SNR) stays below ~40 bit/s/Hz for any Table-I drop."""
+    params = ChannelParams()
+    model = ChannelModel(params, seed=7)
+    for _ in range(50):
+        rates = model.draw_rates()
+        assert rates.shape == (params.n_clients, params.n_channels)
+        assert np.all(np.isfinite(rates)) and np.all(rates > 0)
+        assert np.all(rates / params.bandwidth < 40.0)
+
+
+def test_more_bandwidth_more_rate_but_sublinear():
+    """B doubles: noise power doubles too, so rate grows < 2x (log term)."""
+    p1 = ChannelParams(n_clients=6, bandwidth=1e7)
+    p2 = ChannelParams(n_clients=6, bandwidth=2e7)
+    r1 = ChannelModel(p1, seed=5).draw_rates()
+    r2 = ChannelModel(p2, seed=5).draw_rates()
+    assert np.all(r2 > r1)
+    assert np.all(r2 < 2.0 * r1)

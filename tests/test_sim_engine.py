@@ -1,0 +1,108 @@
+"""Engine mechanics: wire quantization, masked Pallas/dense aggregation,
+the one-scan compiled run, and the host-policy fallback parity.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sim import build_sim, engine
+from repro.sim.policy import HostFastPolicy
+
+
+@pytest.fixture(scope="module")
+def tiny_sim():
+    return build_sim("tiny", n_clients=8, seed=0, aggregator="pallas")
+
+
+def _wire(u=5, z=5122, seed=0):
+    flat_u = jax.random.normal(jax.random.PRNGKey(seed), (u, z)) * 0.3
+    q = jnp.asarray(np.random.default_rng(seed).integers(1, 9, u), jnp.int32)
+    idx, signs, theta = engine._quantize_wire(jax.random.PRNGKey(seed + 1), flat_u, q, 8)
+    return flat_u, q, idx, signs, theta
+
+
+def test_quantize_wire_error_bound():
+    """Reconstruction error per coordinate <= one quantization step."""
+    flat_u, q, idx, signs, theta = _wire()
+    levels = 2.0 ** q.astype(jnp.float32) - 1.0
+    deq = jnp.where(signs > 0, -1.0, 1.0) * idx.astype(jnp.float32) * (theta / levels)[:, None]
+    step = (theta / levels)[:, None]
+    assert float(jnp.max(jnp.abs(deq - flat_u) / step)) <= 1.0 + 1e-5
+    assert idx.dtype == jnp.uint8  # q_cap <= 8 keeps the u8 wire format
+
+
+def test_pallas_and_dense_aggregators_agree(tiny_sim):
+    flat_u, q, idx, signs, theta = _wire(u=6, z=tiny_sim.z)
+    w = jnp.asarray(np.random.default_rng(1).dirichlet(np.ones(6)), jnp.float32)
+    agg_p = tiny_sim._aggregate(idx, signs, theta, w, q)
+    tiny_sim.aggregator = "dense"
+    try:
+        agg_d = tiny_sim._aggregate(idx, signs, theta, w, q)
+    finally:
+        tiny_sim.aggregator = "pallas"
+    np.testing.assert_allclose(np.asarray(agg_p), np.asarray(agg_d), rtol=1e-5, atol=1e-6)
+
+
+def test_aggregation_masks_unscheduled_clients(tiny_sim):
+    """w = 0 clients contribute nothing, whatever garbage their planes hold."""
+    flat_u, q, idx, signs, theta = _wire(u=4, z=tiny_sim.z)
+    w = jnp.asarray([0.5, 0.0, 0.5, 0.0], jnp.float32)
+    base = tiny_sim._aggregate(idx, signs, theta, w, q)
+    idx2 = idx.at[1].set(255).at[3].set(255)
+    theta2 = theta.at[1].set(1e6)
+    poisoned = tiny_sim._aggregate(idx2, signs, theta2, w, q)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned), rtol=1e-6)
+
+
+def test_run_compiled_smoke_no_eval():
+    sim = build_sim("tiny", n_clients=16, seed=3, aggregator="dense",
+                    batch_size=8, n_test=64)
+    res = sim.run_compiled(3, with_eval=False)
+    u = 16
+    assert res.q_levels.shape == (3, u) and res.rates.shape == (3, u)
+    assert np.all(res.n_scheduled >= 1)
+    assert np.all(np.isfinite(res.energy)) and np.all(res.energy > 0)
+    assert np.all((res.q_levels >= 0) & (res.q_levels <= 8))
+    # scheduled clients carry a positive assigned rate, unscheduled zero
+    sched = res.q_levels > 0
+    assert np.all(res.rates[sched] > 0)
+    assert np.all(res.rates[~sched] == 0)
+
+
+def test_scan_equals_host_policy_replay():
+    """The one-scan engine and the per-round fallback engine driven by the
+    numpy oracle produce the same experiment, decision for decision."""
+    sim_a = build_sim("tiny", n_clients=8, seed=1, aggregator="pallas", n_test=256)
+    res_c = sim_a.run_compiled(6)
+    sim_b = build_sim("tiny", n_clients=8, seed=1, aggregator="pallas", n_test=256)
+    pol = HostFastPolicy(sim_b.sysp, sim_b.eps1, sim_b.eps2, sim_b.v_weight, q_cap=8)
+    res_h = sim_b.run_host_policy(pol, 6, channel="sim")
+    acc_h = np.array([r.accuracy for r in res_h.records])
+    np.testing.assert_allclose(acc_h, res_c.accuracy, atol=1e-6)
+    np.testing.assert_array_equal(
+        np.array([r.n_scheduled for r in res_h.records]), res_c.n_scheduled
+    )
+    np.testing.assert_array_equal(
+        np.stack([r.q_levels for r in res_h.records]), res_c.q_levels
+    )
+    np.testing.assert_allclose(
+        np.array([r.energy for r in res_h.records]), res_c.energy, rtol=1e-5
+    )
+
+
+def test_shard_clients_smoke():
+    """Client-axis sharding via the repro.dist rules on the host mesh."""
+    from jax.sharding import Mesh
+
+    sim = build_sim("tiny", n_clients=8, seed=2, aggregator="dense", n_test=64)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sim.shard_clients(mesh, axis="data")
+    res = sim.run_compiled(2, with_eval=False)
+    assert np.all(np.isfinite(res.energy))
+
+
+def test_lower_only_dry_run():
+    sim = build_sim("tiny", n_clients=8, seed=0, aggregator="dense", n_test=64)
+    lowered = sim.lower(5, with_eval=False)
+    assert "scan" in lowered.as_text() or len(lowered.as_text()) > 0
