@@ -76,7 +76,10 @@ def main() -> None:
     emit(bench_kernels())
     # CPU-sized fleet rows; the 1024-client scale run is
     #   PYTHONPATH=src python benchmarks/sim_benchmarks.py --clients 1024
+    # (add --policy=ga for the compiled Algorithm-1 population search)
     emit(simb.bench_fleet_scale(u=64, n_rounds=10, batch_size=8))
+    emit(simb.bench_fleet_scale(u=32, n_rounds=4, batch_size=8, policy="ga",
+                                ga_generations=8, ga_population=12))
     emit(simb.bench_sim_vs_object(u=8, n_rounds=10))
     emit(flb.bench_v_tradeoff(task="tiny", n_rounds=10))
     emit(flb.bench_task("femnist", betas=(300.0,), n_rounds=6))

@@ -6,8 +6,11 @@ and reports rounds/sec with compile time split out:
 
     PYTHONPATH=src python benchmarks/sim_benchmarks.py --clients 1024 --rounds 20
 
-``--dry-run`` traces + lowers the full scan without executing (the CI
-manual-dispatch job uses this: lowering success is the gate, no CPU burn).
+``--policy=ga`` swaps the greedy fast path for the fully compiled GA
+(``repro.sim.search``) — the whole Algorithm 1 population search runs inside
+the same one-compile scan. ``--dry-run`` traces + lowers the full scan
+without executing (the CI manual-dispatch job uses this: lowering success is
+the gate, no CPU burn).
 """
 from __future__ import annotations
 
@@ -29,21 +32,33 @@ def bench_fleet_scale(
     seed: int = 0,
     dry_run: bool = False,
     with_eval: bool = False,
+    policy: str = "greedy",       # "greedy" | "ga" (compiled-ga in the scan)
+    ga_generations: int = 30,
+    ga_population: int = 32,
 ) -> list[tuple]:
     """U-client QCCF rounds in one compiled scan; rows are run.py-style CSV."""
     import jax
+    from repro.core.genetic import GAConfig
     from repro.sim import build_sim
 
+    assert policy in ("greedy", "ga"), policy
+    policy_mode = "compiled-ga" if policy == "ga" else "greedy"
+    ga_config = GAConfig(
+        generations=ga_generations, population=ga_population,
+        repair_infeasible=True,
+    )
     rows = []
     t0 = time.time()
     sim = build_sim(
         task, n_clients=u, mu=mu, beta=beta, seed=seed,
         batch_size=batch_size, n_test=256,
+        policy_mode=policy_mode, ga_config=ga_config,
     )
     build_s = time.time() - t0
     rows.append((
-        f"sim_build[U={u},{task}]", build_s * 1e6,
-        f"z={sim.z};aggregator={sim.aggregator};n_max={int(sim.fleet.x.shape[1])}",
+        f"sim_build[U={u},{task},{policy}]", build_s * 1e6,
+        f"z={sim.z};aggregator={sim.aggregator};n_max={int(sim.fleet.x.shape[1])}"
+        f";policy={policy_mode}",
     ))
 
     keys = jax.random.split(jax.random.PRNGKey(sim.seed + 1), n_rounds)
@@ -51,16 +66,18 @@ def bench_fleet_scale(
     t0 = time.time()
     lowered = sim._scan_fn(with_eval).lower(carry, keys)
     lower_s = time.time() - t0
-    rows.append((f"sim_lower[U={u},rounds={n_rounds}]", lower_s * 1e6,
+    rows.append((f"sim_lower[U={u},rounds={n_rounds},{policy}]", lower_s * 1e6,
                  f"hlo_bytes={len(lowered.as_text())}"))
     if dry_run:
-        rows.append((f"sim_dryrun[U={u},rounds={n_rounds}]", 0.0, "lowered=ok"))
+        rows.append((f"sim_dryrun[U={u},rounds={n_rounds},{policy}]", 0.0,
+                     "lowered=ok"))
         return rows
 
     t0 = time.time()
     compiled = lowered.compile()
     compile_s = time.time() - t0
-    rows.append((f"sim_compile[U={u},rounds={n_rounds}]", compile_s * 1e6, "one_compile"))
+    rows.append((f"sim_compile[U={u},rounds={n_rounds},{policy}]",
+                 compile_s * 1e6, "one_compile"))
 
     t0 = time.time()
     (flat, *_), out = compiled(carry, keys)
@@ -72,7 +89,7 @@ def bench_fleet_scale(
     qs = np.asarray(out["q_levels"])
     mean_q = float(qs[qs > 0].mean()) if (qs > 0).any() else 0.0
     rows.append((
-        f"sim_fleet[U={u},rounds={n_rounds}]",
+        f"sim_fleet[U={u},rounds={n_rounds},{policy}]",
         run_s / n_rounds * 1e6,
         f"rounds_per_s={n_rounds / run_s:.3f};mean_sched={n_sched.mean():.1f}"
         f";mean_q={mean_q:.2f};energy_J={float(np.asarray(out['energy']).sum()):.5f}",
@@ -117,12 +134,17 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--eval", action="store_true")
+    ap.add_argument("--policy", choices=["greedy", "ga"], default="greedy",
+                    help="ga = full Algorithm 1 (compiled GA) inside the scan")
+    ap.add_argument("--ga-generations", type=int, default=30)
+    ap.add_argument("--ga-population", type=int, default=32)
     args = ap.parse_args()
     print("name,us_per_call,derived", flush=True)
     rows = bench_fleet_scale(
         u=args.clients, n_rounds=args.rounds, task=args.task, mu=args.mu,
         beta=args.beta, batch_size=args.batch_size, seed=args.seed,
-        dry_run=args.dry_run, with_eval=args.eval,
+        dry_run=args.dry_run, with_eval=args.eval, policy=args.policy,
+        ga_generations=args.ga_generations, ga_population=args.ga_population,
     )
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)

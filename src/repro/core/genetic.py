@@ -24,6 +24,11 @@ from repro.core import bounds, kkt
 from repro.core.lyapunov import LyapunovState
 
 
+# Fitness sentinel for infeasible chromosomes, shared with the compiled
+# population search (repro.sim.search): paper fitness 0 == objective +inf.
+J0_INFEASIBLE = float("inf")
+
+
 @dataclasses.dataclass(frozen=True)
 class GAConfig:
     generations: int = 30       # s_max
@@ -32,6 +37,7 @@ class GAConfig:
     p_mutation: float = 0.08    # p^m
     iota: float = 1.0           # fitness dispersion exponent
     elitism: int = 2            # carried-over best chromosomes
+    tournament: int = 2         # tournament size (compiled search selection)
     repair_infeasible: bool = False  # beyond-paper: drop clients vs fitness=0
 
 
@@ -237,7 +243,7 @@ def run_ga(
     best: Optional[Decision] = None
     for _gen in range(cfg.generations):
         decs = eval_all(pop)
-        j0s = np.array([d.j0 if d.feasible else np.inf for d in decs])
+        j0s = np.array([d.j0 if d.feasible else J0_INFEASIBLE for d in decs])
         finite = np.isfinite(j0s)
         if finite.any():
             j0_max = float(np.max(j0s[finite]))

@@ -7,6 +7,7 @@ from repro.sim.channel import SimChannel, drop_clients
 from repro.sim.engine import FleetSim, SimResult, build_sim
 from repro.sim.fleet import Fleet, build_fleet, ema_update, fleet_local_sgd
 from repro.sim.policy import FastDecision, HostFastPolicy, decide, decide_host, greedy_assign, greedy_assign_host, solve_kkt
+from repro.sim.search import HostGAPolicy, ga_decide, run_ga_host
 
 __all__ = [
     "SimChannel", "drop_clients",
@@ -14,4 +15,5 @@ __all__ = [
     "Fleet", "build_fleet", "ema_update", "fleet_local_sgd",
     "FastDecision", "HostFastPolicy", "decide", "decide_host", "greedy_assign",
     "greedy_assign_host", "solve_kkt",
+    "HostGAPolicy", "ga_decide", "run_ga_host",
 ]

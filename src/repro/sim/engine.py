@@ -30,12 +30,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
-from repro.core.genetic import RoundContext, SystemParams
+from repro.core.genetic import GAConfig, RoundContext, SystemParams
 from repro.data.synthetic import SyntheticImageTask, gaussian_sizes, make_federated_datasets, make_test_set
 from repro.fl.trainer import ExperimentResult, RoundRecord
 from repro.kernels import stochastic_quant as sq
 from repro.models import cnn
 from repro.sim import policy as fast_policy
+from repro.sim import search
 from repro.sim.channel import SimChannel
 from repro.sim.fleet import Fleet, build_fleet, ema_update, fleet_local_sgd
 from repro.wireless.channel import ChannelModel, ChannelParams
@@ -131,6 +132,8 @@ class FleetSim:
         block_m: int = 64,
         seed: int = 0,
         host_channel: Optional[ChannelModel] = None,
+        policy_mode: str = "greedy",  # "greedy" | "host-ga" | "compiled-ga"
+        ga_config: Optional[GAConfig] = None,
         name: str = "sim_qccf",
     ) -> None:
         flat0, unravel = ravel_pytree(init_params)
@@ -157,6 +160,14 @@ class FleetSim:
         self.block_m = int(block_m)
         self.seed = int(seed)
         self.host_channel = host_channel
+        assert policy_mode in ("greedy", "host-ga", "compiled-ga"), policy_mode
+        self.policy_mode = policy_mode
+        # Engine default: repair (drop infeasible clients), the same
+        # semantics as the greedy fast path's feasibility gate; pass an
+        # explicit GAConfig for the paper's fitness-0 rule.
+        if ga_config is None:
+            ga_config = GAConfig(repair_infeasible=True)
+        self.ga_config = ga_config
         self.name = name
         self._compiled: dict = {}
 
@@ -194,10 +205,21 @@ class FleetSim:
         g_n = g_sq / jnp.maximum(jnp.mean(g_sq), 1e-12)
         s_n = sigma_sq / jnp.maximum(jnp.mean(sigma_sq), 1e-12)
         d_sizes = self.fleet.n_samples.astype(jnp.float32)
-        dec = fast_policy.decide(
-            rates, d_sizes, g_n, s_n, theta_max, lam2, sysp, z,
-            self.v_weight, q_cap=self.q_cap,
-        )
+        if self.policy_mode == "compiled-ga":
+            # Full Algorithm 1 inside the trace: GA over channel assignments
+            # with the KKT fitness. The GA key derives from the ROUND key
+            # (not k_ch) so greedy-mode streams stay byte-identical to the
+            # two-mode engine; run_host_policy mirrors this fold_in.
+            k_ga = jax.random.fold_in(key, search.GA_KEY_TAG)
+            dec = search.ga_decide(
+                k_ga, rates, d_sizes, g_n, s_n, theta_max, lam1, lam2, sysp,
+                z, self.v_weight, cfg=self.ga_config, q_cap=self.q_cap,
+            )
+        else:
+            dec = fast_policy.decide(
+                rates, d_sizes, g_n, s_n, theta_max, lam2, sysp, z,
+                self.v_weight, q_cap=self.q_cap,
+            )
         af = dec.a.astype(jnp.float32)
 
         params = self.unravel(flat)
@@ -263,7 +285,11 @@ class FleetSim:
         return self._scan_fn(with_eval).lower(self._init_carry(), keys)
 
     def run_compiled(self, n_rounds: int, with_eval: bool = True) -> SimResult:
-        """The tentpole path: every round traced into one jitted scan."""
+        """The one-scan path: every round traced into one jitted scan
+        (policy modes "greedy" and "compiled-ga")."""
+        assert self.policy_mode != "host-ga", (
+            "host-ga decides on the host per round; use run() / run_host_policy"
+        )
         fn = self._compiled.get(with_eval)
         if fn is None:
             fn = self._compiled[with_eval] = self._scan_fn(with_eval)
@@ -284,9 +310,28 @@ class FleetSim:
             lambda2=np.asarray(out["lambda2"], np.float64),
         )
 
+    def make_host_ga_policy(self) -> "search.HostGAPolicy":
+        """The host GA controller paired to this sim's constants and
+        ``ga_config`` — the oracle that replays a compiled-GA scan."""
+        return search.HostGAPolicy(
+            self.sysp, self.eps1, self.eps2, self.v_weight,
+            cfg=self.ga_config, q_cap=self.q_cap,
+        )
+
+    def run(self, n_rounds: int, with_eval: bool = True) -> ExperimentResult:
+        """Mode dispatch: one-scan for greedy/compiled-ga, the per-round
+        fallback engine with the host GA controller for host-ga. Always
+        returns an ``ExperimentResult`` (SimResult adapts via to_result)."""
+        if self.policy_mode == "host-ga":
+            return self.run_host_policy(
+                self.make_host_ga_policy(), n_rounds, channel="sim",
+                with_eval=with_eval,
+            )
+        return self.run_compiled(n_rounds, with_eval=with_eval).to_result()
+
     # ------------------------------------------------- host-policy fallback
 
-    def _exec_fn(self):
+    def _exec_fn(self, with_eval: bool = True):
         """One compiled round execution for externally supplied decisions."""
 
         @jax.jit
@@ -305,13 +350,17 @@ class FleetSim:
             idx, signs, theta = _quantize_wire(k_quant, flat_u, q, self.q_cap)
             agg = self._aggregate(idx, signs, theta, w_round, q)
             new_flat = jnp.where(jnp.sum(w_round) > 0, agg[: self.z], flat)
-            acc, loss = self.eval_fn(new_flat)
+            if with_eval:
+                acc, loss = self.eval_fn(new_flat)
+            else:
+                acc, loss = jnp.float32(0.0), jnp.float32(0.0)
             return new_flat, g_obs, s_obs, theta, acc, loss
 
         return exec_round
 
     def run_host_policy(self, policy, n_rounds: int,
-                        channel: str = "sim") -> ExperimentResult:
+                        channel: str = "sim",
+                        with_eval: bool = True) -> ExperimentResult:
         """Per-round Python fallback: a host Policy (e.g. the GA-backed
         ``QCCFController`` via ``repro.fl.baselines.QCCFPolicy``) makes the
         decisions; training/quantize/aggregate still run compiled.
@@ -329,7 +378,7 @@ class FleetSim:
         assert channel in ("sim", "host")
         if channel == "host":
             assert self.host_channel is not None, "build with a host ChannelModel"
-        exec_round = self._exec_fn()
+        exec_round = self._exec_fn(with_eval)
         u = self.fleet.n_clients
         d_sizes = self.fleet.d_sizes.astype(np.float64)
         g_sq = np.ones(u)
@@ -353,6 +402,9 @@ class FleetSim:
                 theta_max=theta_max.copy(),
                 z=self.z,
             )
+            if hasattr(policy, "set_round_key"):
+                # same per-round GA key derivation as the compiled-ga scan
+                policy.set_round_key(jax.random.fold_in(keys[n], search.GA_KEY_TAG))
             dec = policy.decide(ctx)
             d_n = float(np.sum(dec.a * d_sizes))
             w_round = np.where(dec.a > 0, dec.a * d_sizes / max(d_n, 1e-12), 0.0)
@@ -427,6 +479,8 @@ def build_sim(
     block_m: int = 64,
     n_test: int = 1024,
     target_q: float = 6.0,
+    policy_mode: str = "greedy",
+    ga_config: Optional[GAConfig] = None,
 ) -> FleetSim:
     """Mirror of ``repro.fl.experiment.build_experiment`` for the compiled
     engine: same task specs, same dataset/draw seeds, same client drop, and
@@ -474,4 +528,5 @@ def build_sim(
         eps1=eps1, eps2=eps2, v_weight=v_weight, lr=lr,
         batch_size=batch_size, q_cap=q_cap, aggregator=aggregator,
         block_m=block_m, seed=seed, host_channel=host_channel,
+        policy_mode=policy_mode, ga_config=ga_config,
     )

@@ -101,6 +101,15 @@ class FastDecision:
     payload_bits: Any  # scalar
 
 
+# All-array dataclass; registering it as a pytree lets compiled decision
+# functions (decide, search.ga_decide) return one across a jit boundary.
+jax.tree_util.register_dataclass(
+    FastDecision,
+    data_fields=[f.name for f in dataclasses.fields(FastDecision)],
+    meta_fields=[],
+)
+
+
 def _s_of_q(v, d, q, sysp: SystemParams, z: int):
     """Latency-tight frequency S(q), inf when the deadline is unmeetable."""
     slack = v * sysp.t_max - (z * q + z + RANGE_BITS)
@@ -292,8 +301,18 @@ def quant_term(consts: bounds.BoundConstants, w_round, z, theta_max, q):
 
 # --------------------------------------------------------------- decide
 
-def decide(
-    rates: jax.Array,      # (U, C)
+def participation_from_assign(assign: jax.Array, rates: jax.Array):
+    """(C,) chromosome -> ((U,) assigned rate, (U,) bool participation)."""
+    u = rates.shape[0]
+    onehot = (assign[None, :] == jnp.arange(u)[:, None]) & (assign[None, :] >= 0)
+    v_assigned = jnp.sum(jnp.where(onehot, rates, 0.0), axis=1)
+    return v_assigned, onehot.any(axis=1)
+
+
+def finish_decision(
+    assign: jax.Array,     # (C,) channel -> client (-1 unused)
+    v_assigned: jax.Array, # (U,) assigned uplink rate
+    a0: jax.Array,         # (U,) bool pre-drop participation
     d_sizes: jax.Array,    # (U,)
     g_sq: jax.Array,       # (U,) normalized G^2 estimates
     sigma_sq: jax.Array,   # (U,)
@@ -304,16 +323,15 @@ def decide(
     v_weight: float,
     q_cap: int = 8,
 ) -> FastDecision:
-    """One fully traced decision round (steps 1-2 of the fast path)."""
-    u = rates.shape[0]
-    assign = greedy_assign(rates)
-    onehot = (assign[None, :] == jnp.arange(u)[:, None]) & (assign[None, :] >= 0)
-    v_assigned = jnp.sum(jnp.where(onehot, rates, 0.0), axis=1)
-    a0 = onehot.any(axis=1)
+    """Steps 2-3 of the fast path for ANY channel assignment: infeasibility
+    drop + vectorized KKT + bound terms. Shared by the greedy :func:`decide`
+    and by the compiled GA fitness (``repro.sim.search``), which evaluates
+    every chromosome through exactly this code path."""
+    u = d_sizes.shape[0]
 
     # Feasibility does not depend on w or the queues, so one drop pass
     # suffices (the repair loop of evaluate_assignment converges in one
-    # iteration for the greedy fast path).
+    # iteration for any fixed assignment).
     qmax = (v_assigned * sysp.t_max
             - sysp.tau_e * sysp.gamma * d_sizes * v_assigned / sysp.f_max
             - z - RANGE_BITS) / z
@@ -360,6 +378,27 @@ def decide(
     )
 
 
+def decide(
+    rates: jax.Array,      # (U, C)
+    d_sizes: jax.Array,    # (U,)
+    g_sq: jax.Array,       # (U,) normalized G^2 estimates
+    sigma_sq: jax.Array,   # (U,)
+    theta_max: jax.Array,  # (U,)
+    lam2: jax.Array,       # scalar lambda2 queue (sound form: lam = lambda2)
+    sysp: SystemParams,
+    z: int,
+    v_weight: float,
+    q_cap: int = 8,
+) -> FastDecision:
+    """One fully traced decision round (steps 1-2 of the fast path)."""
+    assign = greedy_assign(rates)
+    v_assigned, a0 = participation_from_assign(assign, rates)
+    return finish_decision(
+        assign, v_assigned, a0, d_sizes, g_sq, sigma_sq, theta_max, lam2,
+        sysp, z, v_weight, q_cap=q_cap,
+    )
+
+
 class HostFastPolicy:
     """The fast path as a host-side ``repro.fl`` Policy.
 
@@ -399,7 +438,8 @@ class HostFastPolicy:
         self.lambda2 = max(self.lambda2 + dec.quant_term - self.eps2, 0.0)
 
 
-def decide_host(
+def finish_host(
+    assign: np.ndarray,
     rates: np.ndarray,
     d_sizes: np.ndarray,
     g_sq: np.ndarray,
@@ -411,10 +451,11 @@ def decide_host(
     v_weight: float,
     q_cap: int = 8,
 ) -> FastDecision:
-    """Numpy oracle for :func:`decide`: same greedy assignment, but the
-    per-client solve goes through the trusted scalar ``repro.core.kkt``."""
+    """Numpy mirror of :func:`finish_decision` for ANY assignment: the
+    per-client solve goes through the trusted scalar ``repro.core.kkt``.
+    Shared by :func:`decide_host` and the host GA oracle
+    (``repro.sim.search.run_ga_host``)."""
     u = rates.shape[0]
-    assign = greedy_assign_host(rates)
     v_assigned = np.zeros(u)
     for ch, cid in enumerate(assign):
         if cid >= 0:
@@ -463,4 +504,23 @@ def decide_host(
         assign=assign_kept, a=a.astype(np.int64), q=q, f=f,
         v_assigned=np.where(a, v_assigned, 0.0), energy=energy,
         latency=latency, data_term=dt, quant_term=qt, payload_bits=payload,
+    )
+
+
+def decide_host(
+    rates: np.ndarray,
+    d_sizes: np.ndarray,
+    g_sq: np.ndarray,
+    sigma_sq: np.ndarray,
+    theta_max: np.ndarray,
+    lam2: float,
+    sysp: SystemParams,
+    z: int,
+    v_weight: float,
+    q_cap: int = 8,
+) -> FastDecision:
+    """Numpy oracle for :func:`decide`: greedy assignment + scalar KKT."""
+    return finish_host(
+        greedy_assign_host(rates), rates, d_sizes, g_sq, sigma_sq, theta_max,
+        lam2, sysp, z, v_weight, q_cap=q_cap,
     )

@@ -1,0 +1,388 @@
+"""Compiled population search over channel assignments (full Algorithm 1).
+
+``repro.sim.policy`` compiles the greedy fast path; this module compiles the
+paper's actual outer search: a genetic algorithm over OFDMA channel
+assignments whose fitness is the closed-form KKT solve (eq. 41/42) on every
+chromosome. Everything is expressed as fixed-shape jnp ops so the whole GA
+traces into the fleet engine's ``lax.scan`` round body — population init is
+a vmapped random valid assignment, selection is tournament-by-objective,
+crossover/mutation are masked ``where``s, and duplicate repair is the
+stable-argsort first-occurrence keeper (no data-dependent shapes anywhere).
+
+``run_ga_host`` is the numpy oracle: identical operators driven by the SAME
+``jax.random`` key schedule (the draws are made eagerly on the host with the
+same keys and shapes), with fitness through the trusted scalar
+``repro.core.kkt`` solver via ``policy.finish_host``. On a shared key the
+two searches visit identical populations, so the winning assignment matches
+bit for bit (fitness comparisons only diverge on near-exact j0 ties between
+*distinct* chromosomes, which fixed test seeds avoid; ties between duplicate
+chromosomes resolve identically because argmin/argsort keep first index and
+stable order on both sides).
+
+Key-schedule contract (mirrored exactly by the host oracle):
+
+    k                 -> k_init, k_evolve = split(k)
+    init chromosome i -> ki = split(k_init, P)[i]; kk, ku, kc = split(ki, 3)
+                         n_sched = randint(kk, (), 1, min(U, C) + 1)
+                         perm_u = permutation(ku, U); perm_c = permutation(kc, C)
+    generation g      -> kg = split(k_evolve, G)[g]
+                         k_sel, k_cx, k_pt, k_mm, k_mv = split(kg, 5)
+                         cand     = randint(k_sel, (NP, 2, T), 0, P)
+                         do_cx    = uniform(k_cx, (NP,)) < p_crossover
+                         pt       = randint(k_pt, (NP,), 1, C)
+                         mut_mask = uniform(k_mm, (P - E, C)) < p_mutation
+                         mut_val  = randint(k_mv, (P - E, C), -1, U)
+
+with P = population, E = elitism, T = tournament, NP = ceil((P - E) / 2).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.genetic import Decision, GAConfig, J0_INFEASIBLE, SystemParams
+from repro.sim import policy as fast_policy
+
+# fold_in tag deriving the per-round GA key from the round key (see
+# engine._round_body and run_host_policy — both sides must use the same tag).
+GA_KEY_TAG = 11
+
+
+# ----------------------------------------------------------------- operators
+
+def repair_duplicates(assign: jax.Array) -> jax.Array:
+    """C2/C3 repair: each client keeps its LOWEST-index channel, compiled.
+
+    ``core.genetic._repair_duplicates`` keeps a random channel; here the
+    keeper is deterministic (first occurrence) so the operator needs no key
+    and the host oracle mirrors it exactly. Stable argsort groups equal
+    client ids in ascending channel order; the first row of each group wins.
+    """
+    c = assign.shape[0]
+    order = jnp.argsort(assign)                      # stable in jnp
+    sorted_vals = assign[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_vals[1:] != sorted_vals[:-1]]
+    )
+    keep = jnp.zeros((c,), bool).at[order].set(first & (sorted_vals >= 0))
+    return jnp.where(keep, assign, -1)
+
+
+def repair_duplicates_host(assign: np.ndarray) -> np.ndarray:
+    """Numpy mirror of :func:`repair_duplicates` (same keeper)."""
+    assign = np.asarray(assign)
+    c = assign.shape[0]
+    order = np.argsort(assign, kind="stable")
+    sorted_vals = assign[order]
+    first = np.concatenate([[True], sorted_vals[1:] != sorted_vals[:-1]])
+    keep = np.zeros(c, bool)
+    keep[order] = first & (sorted_vals >= 0)
+    return np.where(keep, assign, -1).astype(assign.dtype)
+
+
+def random_assignment(key: jax.Array, n_clients: int, n_channels: int) -> jax.Array:
+    """Traced port of ``core.genetic._random_chromosome``: a random injective
+    channel->client map scheduling 1..min(U, C) clients."""
+    m = min(n_clients, n_channels)
+    kk, ku, kc = jax.random.split(key, 3)
+    n_sched = jax.random.randint(kk, (), 1, m + 1)
+    perm_u = jax.random.permutation(ku, n_clients)
+    perm_c = jax.random.permutation(kc, n_channels)
+    vals = jnp.where(jnp.arange(m) < n_sched, perm_u[:m], -1).astype(jnp.int32)
+    return jnp.full((n_channels,), -1, jnp.int32).at[perm_c[:m]].set(vals)
+
+
+def random_assignment_host(key: jax.Array, n_clients: int, n_channels: int) -> np.ndarray:
+    """Host mirror: the same ``jax.random`` draws, numpy assembly."""
+    m = min(n_clients, n_channels)
+    kk, ku, kc = jax.random.split(key, 3)
+    n_sched = int(jax.random.randint(kk, (), 1, m + 1))
+    perm_u = np.asarray(jax.random.permutation(ku, n_clients))
+    perm_c = np.asarray(jax.random.permutation(kc, n_channels))
+    assign = np.full(n_channels, -1, dtype=np.int64)
+    assign[perm_c[:n_sched]] = perm_u[:n_sched]
+    return assign
+
+
+def next_generation(
+    kg: jax.Array,
+    pop: jax.Array,        # (P, C) int32
+    j0: jax.Array,         # (P,) objective per chromosome (lower is better)
+    cfg: GAConfig,
+    n_clients: int,
+) -> jax.Array:
+    """One compiled evolution step: elitism + tournament + crossover + mutate."""
+    p, c = pop.shape
+    n_child = p - cfg.elitism
+    n_pairs = (n_child + 1) // 2
+    k_sel, k_cx, k_pt, k_mm, k_mv = jax.random.split(kg, 5)
+
+    cand = jax.random.randint(k_sel, (n_pairs, 2, cfg.tournament), 0, p)
+    win = jnp.argmin(j0[cand], axis=-1)                        # ties -> first
+    parent_idx = jnp.take_along_axis(cand, win[..., None], axis=-1)[..., 0]
+    p1, p2 = pop[parent_idx[:, 0]], pop[parent_idx[:, 1]]
+
+    do_cx = jax.random.uniform(k_cx, (n_pairs,)) < cfg.p_crossover
+    pt = jax.random.randint(k_pt, (n_pairs,), 1, c)
+    cut = jnp.arange(c)[None, :] < pt[:, None]
+    x1 = jax.vmap(repair_duplicates)(jnp.where(cut, p1, p2))
+    c1 = jnp.where(do_cx[:, None], x1, p1)
+    x2 = jax.vmap(repair_duplicates)(jnp.where(cut, p2, p1))
+    c2 = jnp.where(do_cx[:, None], x2, p2)
+    children = jnp.stack([c1, c2], axis=1).reshape(2 * n_pairs, c)[:n_child]
+
+    mut_mask = jax.random.uniform(k_mm, (n_child, c)) < cfg.p_mutation
+    mut_val = jax.random.randint(k_mv, (n_child, c), -1, n_clients)
+    children = jax.vmap(repair_duplicates)(
+        jnp.where(mut_mask, mut_val, children).astype(jnp.int32)
+    )
+
+    elites = pop[jnp.argsort(j0)[: cfg.elitism]]               # stable sort
+    return jnp.concatenate([elites, children], axis=0)
+
+
+# ------------------------------------------------------------------- fitness
+
+def evaluate_population(
+    pop: jax.Array,        # (P, C)
+    rates: jax.Array,      # (U, C)
+    d_sizes: jax.Array,
+    g_sq: jax.Array,
+    sigma_sq: jax.Array,
+    theta_max: jax.Array,
+    lam1: jax.Array,       # scalar lambda1 queue
+    lam2: jax.Array,       # scalar lambda2 queue
+    sysp: SystemParams,
+    z: int,
+    v_weight: float,
+    q_cap: int,
+    repair_infeasible: bool,
+) -> jax.Array:
+    """(P,) drift-plus-penalty objective J0 per chromosome (eq. 26, sound
+    form): lam1 * data_term + lam2 * quant_term + V * energy, through the
+    same ``policy.finish_decision`` path as the greedy fast path. With
+    ``repair_infeasible`` False, chromosomes whose scheduled set needed the
+    feasibility drop get ``J0_INFEASIBLE`` (the paper's fitness-0 rule)."""
+
+    def eval_one(assign):
+        v_assigned, a0 = fast_policy.participation_from_assign(assign, rates)
+        fd = fast_policy.finish_decision(
+            assign, v_assigned, a0, d_sizes, g_sq, sigma_sq, theta_max, lam2,
+            sysp, z, v_weight, q_cap=q_cap,
+        )
+        j0 = (lam1 * fd.data_term + lam2 * fd.quant_term
+              + v_weight * jnp.sum(fd.energy))
+        if not repair_infeasible:
+            dropped = jnp.any(a0 & (fd.a == 0))
+            j0 = jnp.where(dropped, jnp.float32(J0_INFEASIBLE), j0)
+        return j0
+
+    return jax.vmap(eval_one)(pop)
+
+
+# -------------------------------------------------------------- compiled GA
+
+def ga_decide(
+    key: jax.Array,
+    rates: jax.Array,      # (U, C)
+    d_sizes: jax.Array,
+    g_sq: jax.Array,
+    sigma_sq: jax.Array,
+    theta_max: jax.Array,
+    lam1: jax.Array,
+    lam2: jax.Array,
+    sysp: SystemParams,
+    z: int,
+    v_weight: float,
+    cfg: GAConfig = GAConfig(),
+    q_cap: int = 8,
+) -> fast_policy.FastDecision:
+    """Algorithm 1, fully traced: GA over assignments + KKT fitness.
+
+    Returns the :class:`policy.FastDecision` of the best chromosome found
+    over ``cfg.generations`` x ``cfg.population`` evaluations (like the
+    numpy ``run_ga``, the final generation's children are produced but not
+    evaluated). If no chromosome was ever feasible the empty assignment is
+    returned (schedule nobody), matching ``run_ga``'s fallback.
+    """
+    u, c = rates.shape
+    assert c >= 2, "population search needs at least two channels"
+    k_init, k_evolve = jax.random.split(key)
+    pop0 = jax.vmap(lambda k: random_assignment(k, u, c))(
+        jax.random.split(k_init, cfg.population)
+    )
+    gen_keys = jax.random.split(k_evolve, cfg.generations)
+
+    def gen_body(carry, kg):
+        pop, best_assign, best_j0 = carry
+        j0 = evaluate_population(
+            pop, rates, d_sizes, g_sq, sigma_sq, theta_max, lam1, lam2,
+            sysp, z, v_weight, q_cap, cfg.repair_infeasible,
+        )
+        i_star = jnp.argmin(j0)                                # ties -> first
+        better = j0[i_star] < best_j0
+        best_assign = jnp.where(better, pop[i_star], best_assign)
+        best_j0 = jnp.where(better, j0[i_star], best_j0)
+        pop = next_generation(kg, pop, j0, cfg, u)
+        return (pop, best_assign, best_j0), best_j0
+
+    init = (pop0, jnp.full((c,), -1, jnp.int32), jnp.float32(J0_INFEASIBLE))
+    (_pop, best_assign, _best_j0), _trace = jax.lax.scan(gen_body, init, gen_keys)
+
+    # Re-evaluate the winner (deterministic) to materialize the full record;
+    # an all-infeasible search leaves best_assign empty == schedule nobody.
+    v_assigned, a0 = fast_policy.participation_from_assign(best_assign, rates)
+    return fast_policy.finish_decision(
+        best_assign, v_assigned, a0, d_sizes, g_sq, sigma_sq, theta_max,
+        lam2, sysp, z, v_weight, q_cap=q_cap,
+    )
+
+
+# ------------------------------------------------------------- host oracle
+
+def _j0_host(fd: fast_policy.FastDecision, lam1: float, lam2: float,
+             v_weight: float) -> float:
+    return (lam1 * float(fd.data_term) + lam2 * float(fd.quant_term)
+            + v_weight * float(np.sum(fd.energy)))
+
+
+def run_ga_host(
+    key: jax.Array,
+    rates: np.ndarray,     # (U, C)
+    d_sizes: np.ndarray,
+    g_sq: np.ndarray,
+    sigma_sq: np.ndarray,
+    theta_max: np.ndarray,
+    lam1: float,
+    lam2: float,
+    sysp: SystemParams,
+    z: int,
+    v_weight: float,
+    cfg: GAConfig = GAConfig(),
+    q_cap: int = 8,
+) -> fast_policy.FastDecision:
+    """Numpy oracle of :func:`ga_decide` on the SAME key schedule.
+
+    Randomness comes from eager ``jax.random`` calls with exactly the keys
+    and shapes of the compiled search (see the module docstring contract);
+    selection/crossover/mutation/repair run as plain numpy; fitness goes
+    through ``policy.finish_host`` (scalar f64 ``core.kkt``).
+    """
+    u, c = rates.shape
+    assert c >= 2, "population search needs at least two channels"
+    k_init, k_evolve = jax.random.split(key)
+    init_keys = jax.random.split(k_init, cfg.population)
+    pop = [random_assignment_host(k, u, c) for k in init_keys]
+    gen_keys = jax.random.split(k_evolve, cfg.generations)
+
+    n_child = cfg.population - cfg.elitism
+    n_pairs = (n_child + 1) // 2
+
+    def eval_one(assign: np.ndarray) -> tuple[fast_policy.FastDecision, float]:
+        fd = fast_policy.finish_host(
+            assign, rates, d_sizes, g_sq, sigma_sq, theta_max, lam2, sysp,
+            z, v_weight, q_cap=q_cap,
+        )
+        j0 = _j0_host(fd, lam1, lam2, v_weight)
+        if not cfg.repair_infeasible:
+            a0 = np.isin(np.arange(u), assign[assign >= 0])
+            if np.any(a0 & (fd.a == 0)):
+                j0 = J0_INFEASIBLE
+        return fd, j0
+
+    best_assign = np.full(c, -1, dtype=np.int64)
+    best_j0 = J0_INFEASIBLE
+    for kg in gen_keys:
+        j0 = np.empty(len(pop))
+        for i, ch in enumerate(pop):
+            _fd, j0[i] = eval_one(ch)
+        i_star = int(np.argmin(j0))                            # ties -> first
+        if j0[i_star] < best_j0:
+            best_assign, best_j0 = pop[i_star].copy(), float(j0[i_star])
+
+        k_sel, k_cx, k_pt, k_mm, k_mv = jax.random.split(kg, 5)
+        cand = np.asarray(jax.random.randint(
+            k_sel, (n_pairs, 2, cfg.tournament), 0, cfg.population))
+        do_cx = np.asarray(jax.random.uniform(k_cx, (n_pairs,))) < cfg.p_crossover
+        pt = np.asarray(jax.random.randint(k_pt, (n_pairs,), 1, c))
+        mut_mask = np.asarray(jax.random.uniform(k_mm, (n_child, c))) < cfg.p_mutation
+        mut_val = np.asarray(jax.random.randint(k_mv, (n_child, c), -1, u))
+
+        children: list[np.ndarray] = []
+        for pair in range(n_pairs):
+            wins = np.argmin(j0[cand[pair]], axis=-1)          # (2,)
+            p1 = pop[int(cand[pair, 0, wins[0]])]
+            p2 = pop[int(cand[pair, 1, wins[1]])]
+            if do_cx[pair]:
+                cut = np.arange(c) < pt[pair]
+                c1 = repair_duplicates_host(np.where(cut, p1, p2))
+                c2 = repair_duplicates_host(np.where(cut, p2, p1))
+            else:
+                c1, c2 = p1.copy(), p2.copy()
+            children.extend([c1, c2])
+        children = children[:n_child]
+        children = [
+            repair_duplicates_host(np.where(mut_mask[i], mut_val[i], ch))
+            for i, ch in enumerate(children)
+        ]
+        elites = [pop[i].copy()
+                  for i in np.argsort(j0, kind="stable")[: cfg.elitism]]
+        pop = elites + children
+
+    fd, _ = eval_one(best_assign)
+    return fd
+
+
+# -------------------------------------------------- host Policy adapter
+
+class HostGAPolicy:
+    """:func:`run_ga_host` as a ``repro.fl`` Policy on the engine's key
+    schedule — the host-side GA controller that ``FleetSim.run_host_policy``
+    replays against the compiled-GA scan in the parity tests.
+
+    The engine injects the per-round GA key via :meth:`set_round_key`
+    (``fold_in(round_key, GA_KEY_TAG)``, the same derivation as the compiled
+    round body); driving this policy outside the engine requires seeding
+    each round's key explicitly.
+    """
+
+    name = "host_ga"
+
+    def __init__(self, sysp: SystemParams, eps1: float, eps2: float,
+                 v_weight: float, cfg: GAConfig = GAConfig(),
+                 q_cap: int = 8) -> None:
+        self.sysp = sysp
+        self.eps1, self.eps2 = float(eps1), float(eps2)
+        self.v_weight = float(v_weight)
+        self.cfg = cfg
+        self.q_cap = int(q_cap)
+        self.lambda1 = 0.0
+        self.lambda2 = 0.0
+        self._round_key: Optional[jax.Array] = None
+
+    def set_round_key(self, key: jax.Array) -> None:
+        self._round_key = key
+
+    def decide(self, ctx) -> Decision:
+        assert self._round_key is not None, "set_round_key before decide"
+        key, self._round_key = self._round_key, None
+        fd = run_ga_host(
+            key, np.asarray(ctx.rates), np.asarray(ctx.d_sizes),
+            np.asarray(ctx.g_sq), np.asarray(ctx.sigma_sq),
+            np.asarray(ctx.theta_max), self.lambda1, self.lambda2,
+            self.sysp, ctx.z, self.v_weight, cfg=self.cfg, q_cap=self.q_cap,
+        )
+        return Decision(
+            assign=fd.assign, a=fd.a, q=fd.q, f=fd.f, energy=fd.energy,
+            latency=fd.latency,
+            j0=_j0_host(fd, self.lambda1, self.lambda2, self.v_weight),
+            data_term=float(fd.data_term), quant_term=float(fd.quant_term),
+            feasible=True,
+        )
+
+    def commit(self, dec) -> None:
+        self.lambda1 = max(self.lambda1 + dec.data_term - self.eps1, 0.0)
+        self.lambda2 = max(self.lambda2 + dec.quant_term - self.eps2, 0.0)

@@ -1,6 +1,10 @@
 """Engine mechanics: wire quantization, masked Pallas/dense aggregation,
 the one-scan compiled run, and the host-policy fallback parity.
 """
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -55,6 +59,38 @@ def test_aggregation_masks_unscheduled_clients(tiny_sim):
     np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned), rtol=1e-6)
 
 
+def test_dense_fallback_matches_dequantize_oracle_above_kernel_regime():
+    """U > 32 takes the dense-einsum aggregator (auto mode); pin it against
+    the per-client ``dequantize_indices`` + eq.-2 weighted-sum oracle of
+    tests/test_hetero_aggregation.py, which until now only covered the
+    Pallas small-K path."""
+    from repro.core.quantization import dequantize_indices
+
+    u = 40
+    sim = build_sim("tiny", n_clients=u, seed=5, n_test=64)
+    assert sim.aggregator == "dense"  # auto: beyond the kernel's K <= 32
+
+    flat_u = jax.random.normal(jax.random.PRNGKey(2), (u, sim.z)) * 0.4
+    q = jnp.asarray(np.random.default_rng(2).integers(1, 9, u), jnp.int32)
+    idx, signs, theta = engine._quantize_wire(jax.random.PRNGKey(3), flat_u, q, 8)
+    w = jnp.asarray(np.random.default_rng(3).dirichlet(np.ones(u)), jnp.float32)
+
+    agg = np.asarray(sim._aggregate(idx, signs, theta, w, q))[: sim.z]
+    oracle = sum(
+        float(w[i]) * np.asarray(dequantize_indices(idx[i], signs[i], theta[i], q[i]))
+        for i in range(u)
+    )
+    np.testing.assert_allclose(agg, oracle, rtol=1e-5, atol=1e-6)
+
+    # masking: zero-weight clients contribute nothing even with garbage planes
+    w0 = w.at[7].set(0.0).at[23].set(0.0)
+    base = np.asarray(sim._aggregate(idx, signs, theta, w0, q))
+    poisoned = np.asarray(sim._aggregate(
+        idx.at[7].set(255).at[23].set(255), signs, theta.at[7].set(1e6), w0, q
+    ))
+    np.testing.assert_allclose(base, poisoned, rtol=1e-6)
+
+
 def test_run_compiled_smoke_no_eval():
     sim = build_sim("tiny", n_clients=16, seed=3, aggregator="dense",
                     batch_size=8, n_test=64)
@@ -100,6 +136,44 @@ def test_shard_clients_smoke():
     sim.shard_clients(mesh, axis="data")
     res = sim.run_compiled(2, with_eval=False)
     assert np.all(np.isfinite(res.energy))
+
+
+_SHARD_PARITY_SCRIPT = """
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.sim import build_sim
+assert len(jax.devices()) == 8, jax.devices()
+sim = build_sim("tiny", n_clients=8, seed=4, aggregator="dense", n_test=64)
+base = sim.run_compiled(2, with_eval=False)
+sim2 = build_sim("tiny", n_clients=8, seed=4, aggregator="dense", n_test=64)
+sim2.shard_clients(Mesh(np.array(jax.devices()), ("data",)), axis="data")
+res = sim2.run_compiled(2, with_eval=False)
+np.testing.assert_array_equal(res.q_levels, base.q_levels)
+np.testing.assert_array_equal(res.n_scheduled, base.n_scheduled)
+np.testing.assert_allclose(res.energy, base.energy, rtol=1e-6)
+np.testing.assert_allclose(res.rates, base.rates, rtol=1e-6)
+np.testing.assert_allclose(res.lambda2, base.lambda2, rtol=1e-5, atol=1e-9)
+print("SHARD-PARITY-OK")
+"""
+
+
+def test_shard_clients_multidevice_subprocess_parity():
+    """Genuinely multi-device regression: on 8 forced host devices, sharding
+    the client axis through the repro.dist rules must not change the round
+    outputs. Runs in a subprocess because jax locks the device count at
+    first init (conftest forbids the flag in the pytest process itself)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.path.join(root, "src"),
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD_PARITY_SCRIPT],
+        capture_output=True, text=True, timeout=540, env=env, cwd=root,
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "SHARD-PARITY-OK" in proc.stdout
 
 
 def test_lower_only_dry_run():
