@@ -24,6 +24,85 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
+_WIRE_RATIO_SCRIPT = """
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, numpy as np
+from repro.configs import get_config
+from repro.dist.hlo_analysis import inter_axis_bytes
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import InputShape
+
+cfg = get_config("llama3_8b")
+mesh = make_production_mesh(multi_pod=True)
+# replica groups reference logical partition ids = positions in the
+# flattened (pod, data, model) device order, NOT device.id (the two only
+# coincide when the mesh does not permute devices)
+pod_size = mesh.devices.size // mesh.devices.shape[0]
+pods = {i: i // pod_size for i in range(mesh.devices.size)}
+shape = InputShape("train_small", 512, 64, "train")
+out = {}
+for packed in (False, True):
+    hlo = steps.lower_fl_round(cfg, mesh, shape,
+                               wire_packed=packed).compile().as_text()
+    r = inter_axis_bytes(hlo, pods)
+    mode = "packed" if packed else "fp32"
+    out[mode] = r["inter_bytes"]
+    out[mode + "_unattr"] = r["unattributed_bytes"]
+print("WIRE_RATIO " + json.dumps(out))
+"""
+
+
+def bench_wire_ratio(timeout: int = 1800) -> list[tuple]:
+    """ROADMAP pod-scale item (first half): lower the federated round on
+    the 2x16x16 mesh in both wire modes and record the inter-pod byte
+    ratio (uint8 wire / fp32 payload) via ``inter_axis_bytes``. Runs in a
+    subprocess because the 512-device XLA flag must precede jax init.
+    Asserts the packed wire stays under 0.3x — the paper's
+    ``(Zq + Z + 32)``-bit format at q <= 8 with bit-packed signs is
+    analytically ~0.28x of fp32.
+    """
+    import json as _json
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    env.pop("XLA_FLAGS", None)
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", _WIRE_RATIO_SCRIPT],
+            capture_output=True, text=True, timeout=timeout, env=env, cwd=root,
+        )
+    except subprocess.TimeoutExpired:
+        return [("flround_wire_ratio[2x16x16]", 0.0,
+                 f"FAILED:timeout_after_{timeout}s")]
+    line = next(
+        (l for l in proc.stdout.splitlines() if l.startswith("WIRE_RATIO ")),
+        None,
+    )
+    if proc.returncode != 0 or line is None:
+        return [("flround_wire_ratio[2x16x16]", 0.0,
+                 f"FAILED:{proc.stderr[-200:]}")]
+    res = _json.loads(line[len("WIRE_RATIO "):])
+    # a parse failure that dumps the uplink into unattributed_bytes (or
+    # zeroes the denominator) must fail loudly, not pass vacuously
+    assert res["fp32"] > 0 and res["packed"] > 0, res
+    assert max(res["fp32_unattr"], res["packed_unattr"]) < 0.1 * res["fp32"], (
+        f"replica-group attribution degraded: {res}"
+    )
+    ratio = res["packed"] / res["fp32"]
+    assert ratio < 0.3, (
+        f"inter-pod wire ratio regressed: {ratio:.3f} >= 0.3 "
+        f"(packed={res['packed']:.0f}B fp32={res['fp32']:.0f}B)"
+    )
+    return [(
+        "flround_wire_ratio[llama3_8b,2x16x16]", 0.0,
+        f"inter_pod_ratio={ratio:.4f};u8_bytes={res['packed']:.0f}"
+        f";fp32_bytes={res['fp32']:.0f};assert=lt0.3",
+    )]
+
+
 def bench_kernels() -> list[tuple]:
     import jax
     import jax.numpy as jnp
@@ -76,10 +155,14 @@ def main() -> None:
     emit(bench_kernels())
     # CPU-sized fleet rows; the 1024-client scale run is
     #   PYTHONPATH=src python benchmarks/sim_benchmarks.py --clients 1024
-    # (add --policy=ga for the compiled Algorithm-1 population search)
-    emit(simb.bench_fleet_scale(u=64, n_rounds=10, batch_size=8))
+    # (add --policy=ga for the compiled Algorithm-1 population search;
+    # --json records the rows into BENCH_sim.json)
+    emit(simb.bench_fleet_scale(u=64, n_rounds=10, batch_size=8,
+                                n_channels=8))
     emit(simb.bench_fleet_scale(u=32, n_rounds=4, batch_size=8, policy="ga",
-                                ga_generations=8, ga_population=12))
+                                n_channels=8, ga_generations=8,
+                                ga_population=12))
+    emit(bench_wire_ratio())
     emit(simb.bench_sim_vs_object(u=8, n_rounds=10))
     emit(flb.bench_v_tradeoff(task="tiny", n_rounds=10))
     emit(flb.bench_task("femnist", betas=(300.0,), n_rounds=6))

@@ -1,8 +1,10 @@
 """Fleet-scale benchmarks for the compiled simulator (repro.sim).
 
-The headline entry runs U = 1024 clients for >= 20 QCCF rounds through the
-single jitted ``lax.scan`` — one compile, no per-client Python objects —
-and reports rounds/sec with compile time split out:
+The headline entry runs U = 1024 clients, C = 8 uplink channels (the
+paper's C << U regime) for >= 20 QCCF rounds through the single jitted
+``lax.scan`` — one compile, no per-client Python objects, and per-round
+work compacted to the S = min(U, C) scheduled slots — and reports
+rounds/sec with compile time split out:
 
     PYTHONPATH=src python benchmarks/sim_benchmarks.py --clients 1024 --rounds 20
 
@@ -10,22 +12,29 @@ and reports rounds/sec with compile time split out:
 (``repro.sim.search``) — the whole Algorithm 1 population search runs inside
 the same one-compile scan. ``--dry-run`` traces + lowers the full scan
 without executing (the CI manual-dispatch job uses this: lowering success is
-the gate, no CPU burn).
+the gate, no CPU burn). ``--json`` appends machine-readable rows to
+``BENCH_sim.json`` at the repo root (rounds/sec, compile_s, U, C, policy,
+aggregator) so the perf trajectory across PRs stays recorded.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+BENCH_JSON = os.path.join(ROOT, "BENCH_sim.json")
 
 
 def bench_fleet_scale(
     u: int = 1024,
     n_rounds: int = 20,
     task: str = "tiny",
+    n_channels: int | None = 8,
     mu: float = 100.0,
     beta: float = 20.0,
     batch_size: int = 8,
@@ -35,8 +44,14 @@ def bench_fleet_scale(
     policy: str = "greedy",       # "greedy" | "ga" (compiled-ga in the scan)
     ga_generations: int = 30,
     ga_population: int = 32,
+    json_rows: list | None = None,
 ) -> list[tuple]:
-    """U-client QCCF rounds in one compiled scan; rows are run.py-style CSV."""
+    """U-client QCCF rounds in one compiled scan; rows are run.py-style CSV.
+
+    ``n_channels`` defaults to the paper's sparse uplink (C = 8); pass
+    ``None`` for the dense C = U layout. When ``json_rows`` is a list, a
+    machine-readable record is appended per executed config.
+    """
     import jax
     from repro.core.genetic import GAConfig
     from repro.sim import build_sim
@@ -47,18 +62,18 @@ def bench_fleet_scale(
         generations=ga_generations, population=ga_population,
         repair_infeasible=True,
     )
+    c = u if n_channels is None else int(n_channels)
     rows = []
     t0 = time.time()
     sim = build_sim(
-        task, n_clients=u, mu=mu, beta=beta, seed=seed,
+        task, n_clients=u, n_channels=c, mu=mu, beta=beta, seed=seed,
         batch_size=batch_size, n_test=256,
         policy_mode=policy_mode, ga_config=ga_config,
     )
     build_s = time.time() - t0
     rows.append((
-        f"sim_build[U={u},{task},{policy}]", build_s * 1e6,
-        f"z={sim.z};aggregator={sim.aggregator};n_max={int(sim.fleet.x.shape[1])}"
-        f";policy={policy_mode}",
+        f"sim_build[U={u},C={c},{task},{policy}]", build_s * 1e6,
+        f"z={sim.z};n_max={int(sim.fleet.x.shape[1])};policy={policy_mode}",
     ))
 
     keys = jax.random.split(jax.random.PRNGKey(sim.seed + 1), n_rounds)
@@ -66,17 +81,17 @@ def bench_fleet_scale(
     t0 = time.time()
     lowered = sim._scan_fn(with_eval).lower(carry, keys)
     lower_s = time.time() - t0
-    rows.append((f"sim_lower[U={u},rounds={n_rounds},{policy}]", lower_s * 1e6,
-                 f"hlo_bytes={len(lowered.as_text())}"))
+    rows.append((f"sim_lower[U={u},C={c},rounds={n_rounds},{policy}]",
+                 lower_s * 1e6, f"hlo_bytes={len(lowered.as_text())}"))
     if dry_run:
-        rows.append((f"sim_dryrun[U={u},rounds={n_rounds},{policy}]", 0.0,
-                     "lowered=ok"))
+        rows.append((f"sim_dryrun[U={u},C={c},rounds={n_rounds},{policy}]",
+                     0.0, "lowered=ok"))
         return rows
 
     t0 = time.time()
     compiled = lowered.compile()
     compile_s = time.time() - t0
-    rows.append((f"sim_compile[U={u},rounds={n_rounds},{policy}]",
+    rows.append((f"sim_compile[U={u},C={c},rounds={n_rounds},{policy}]",
                  compile_s * 1e6, "one_compile"))
 
     t0 = time.time()
@@ -89,11 +104,24 @@ def bench_fleet_scale(
     qs = np.asarray(out["q_levels"])
     mean_q = float(qs[qs > 0].mean()) if (qs > 0).any() else 0.0
     rows.append((
-        f"sim_fleet[U={u},rounds={n_rounds},{policy}]",
+        f"sim_fleet[U={u},C={c},rounds={n_rounds},{policy}]",
         run_s / n_rounds * 1e6,
         f"rounds_per_s={n_rounds / run_s:.3f};mean_sched={n_sched.mean():.1f}"
         f";mean_q={mean_q:.2f};energy_J={float(np.asarray(out['energy']).sum()):.5f}",
     ))
+    if json_rows is not None:
+        json_rows.append({
+            "name": f"sim_fleet[U={u},C={c},rounds={n_rounds},{policy}]",
+            "engine": "active-set-compaction",
+            "u": u, "c": c, "rounds": n_rounds, "policy": policy_mode,
+            "aggregator": "pallas-tiled",
+            "rounds_per_s": round(n_rounds / run_s, 5),
+            "compile_s": round(compile_s, 3),
+            "lower_s": round(lower_s, 3),
+            "run_s": round(run_s, 3),
+            "mean_sched": round(float(n_sched.mean()), 2),
+            "mean_q": round(mean_q, 3),
+        })
     return rows
 
 
@@ -123,9 +151,24 @@ def bench_sim_vs_object(u: int = 8, n_rounds: int = 10) -> list[tuple]:
     )]
 
 
+def write_bench_json(new_rows: list[dict], path: str = BENCH_JSON) -> None:
+    """Append executed-config records to the JSON perf trajectory file."""
+    doc = {"rows": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc["rows"].extend(new_rows)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=1024)
+    ap.add_argument("--channels", type=int, default=8,
+                    help="uplink channels C (paper regime C << U); "
+                         "0 means C = U (dense)")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--task", default="tiny")
     ap.add_argument("--mu", type=float, default=100.0)
@@ -138,16 +181,24 @@ def main() -> None:
                     help="ga = full Algorithm 1 (compiled GA) inside the scan")
     ap.add_argument("--ga-generations", type=int, default=30)
     ap.add_argument("--ga-population", type=int, default=32)
+    ap.add_argument("--json", action="store_true",
+                    help=f"append machine-readable rows to {BENCH_JSON}")
     args = ap.parse_args()
     print("name,us_per_call,derived", flush=True)
+    json_rows: list | None = [] if args.json else None
     rows = bench_fleet_scale(
-        u=args.clients, n_rounds=args.rounds, task=args.task, mu=args.mu,
-        beta=args.beta, batch_size=args.batch_size, seed=args.seed,
-        dry_run=args.dry_run, with_eval=args.eval, policy=args.policy,
-        ga_generations=args.ga_generations, ga_population=args.ga_population,
+        u=args.clients, n_rounds=args.rounds, task=args.task,
+        n_channels=(None if args.channels == 0 else args.channels),
+        mu=args.mu, beta=args.beta, batch_size=args.batch_size,
+        seed=args.seed, dry_run=args.dry_run, with_eval=args.eval,
+        policy=args.policy, ga_generations=args.ga_generations,
+        ga_population=args.ga_population, json_rows=json_rows,
     )
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
+    if json_rows:
+        write_bench_json(json_rows)
+        print(f"# wrote {len(json_rows)} row(s) -> {BENCH_JSON}", flush=True)
 
 
 if __name__ == "__main__":

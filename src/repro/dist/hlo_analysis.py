@@ -27,6 +27,11 @@ Contract (consumed by ``launch/dryrun.py`` and the benchmarks):
   }``
 
   ``loop_summary(hlo) -> [{"body", "cond", "trip", "collective_bytes"}]``
+
+  ``inter_axis_bytes(hlo, device_axis) -> {"inter_bytes", "intra_bytes",
+      "unattributed_bytes", "inter_ops"}`` — the weighted bytes split by
+  whether a collective's replica groups cross a device partition (e.g.
+  pods), for inter-pod wire accounting on multi-pod meshes.
 """
 from __future__ import annotations
 
@@ -66,6 +71,15 @@ _LHS_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
 _GROUPS_EMPTY_RE = re.compile(r"replica_groups=\{\}")
+_GROUPS_FULL_RE = re.compile(
+    r"replica_groups=\{(\{[0-9, ]+\}(?:\s*,\s*\{[0-9, ]+\})*)\}"
+)
+_ST_PAIRS_RE = re.compile(
+    r"source_target_pairs=\{(\{[0-9, ]+\}(?:\s*,\s*\{[0-9, ]+\})*)\}"
+)
+_GROUPS_IOTA_FULL_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?"
+)
 _NUM_PARTITIONS_RE = re.compile(r"num_partitions=(\d+)")
 _REPLICA_COUNT_RE = re.compile(r"replica_count=(\d+)")
 
@@ -215,8 +229,44 @@ def _comp_multipliers(comps, parents) -> dict[str, int]:
     return mults
 
 
+def _replica_group_members(line: str, default_n: int):
+    """Materialize the op's replica groups as lists of partition ids, or
+    ``None`` when the line carries no parseable group annotation.
+
+    ``collective-permute`` carries ``source_target_pairs`` instead of
+    replica groups; each (src, tgt) pair is returned as a two-member
+    group, which gives the crossing check the right semantics (the pair
+    IS the transfer)."""
+    m = _GROUPS_IOTA_FULL_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",") if d.strip()]
+        n = 1
+        for d in dims:
+            n *= d
+        ids = list(range(n))
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",") if p.strip()]
+            import numpy as _np
+
+            ids = list(
+                _np.arange(n).reshape(dims).transpose(perm).reshape(-1)
+            )
+        return [ids[i * s : (i + 1) * s] for i in range(g)]
+    m = _GROUPS_FULL_RE.search(line) or _ST_PAIRS_RE.search(line)
+    if m:
+        # groups may carry whitespace ('{0,1}, {2,3}'); take each {...}
+        return [
+            [int(x) for x in grp.split(",") if x.strip()]
+            for grp in re.findall(r"\{([0-9, ]+)\}", m.group(1))
+        ]
+    if _GROUPS_EMPTY_RE.search(line):
+        return [list(range(default_n))]
+    return None
+
+
 def _collective_ops(comps: dict[str, list[str]], default_group: int = 1):
-    """Yield (comp, kind, raw_bytes, label) for every collective op
+    """Yield (comp, kind, raw_bytes, label, line) for every collective op
     definition (async -done halves are skipped; -start carries the op)."""
     for comp, lines in comps.items():
         for line in lines:
@@ -235,7 +285,7 @@ def _collective_ops(comps: dict[str, list[str]], default_group: int = 1):
             else:
                 ml = _LHS_RE.match(line)
                 label = ml.group(1) if ml else kind
-            yield comp, kind, nbytes, label
+            yield comp, kind, nbytes, label, line
 
 
 def weighted_collectives(hlo_text: str) -> dict:
@@ -249,7 +299,7 @@ def weighted_collectives(hlo_text: str) -> dict:
     counts: dict[str, int] = {}
     raw_total = 0.0
     ops: list[dict] = []
-    for comp, kind, nbytes, label in _collective_ops(comps, default_group):
+    for comp, kind, nbytes, label, _line in _collective_ops(comps, default_group):
         weighted = nbytes * mults.get(comp, 1)
         totals[kind] = totals.get(kind, 0.0) + weighted
         counts[kind] = counts.get(kind, 0) + 1
@@ -265,13 +315,63 @@ def weighted_collectives(hlo_text: str) -> dict:
     }
 
 
+def inter_axis_bytes(hlo_text: str, device_axis) -> dict:
+    """Split the weighted collective bytes by device-partition crossing.
+
+    ``device_axis`` maps a partition/device id to its block index on the
+    axis of interest (e.g. ``{device_id: pod_index}`` built from a mesh's
+    leading axis, or a plain sequence indexed by id). A collective counts
+    as *inter* when ANY of its replica groups contains two ids with
+    different block indices — for a pod axis, that is exactly the traffic
+    that crosses the inter-pod links. Ops with no parseable group
+    annotation land in ``unattributed_bytes`` (conservatively neither).
+    """
+    comps = _split_computations(hlo_text)
+    parents, _ = _build_loop_graph(comps)
+    mults = _comp_multipliers(comps, parents)
+    default_n = _module_group_default(hlo_text)
+    if isinstance(device_axis, dict):
+        block = device_axis.get
+    else:
+        block = (  # noqa: E731
+            lambda i: device_axis[i] if 0 <= i < len(device_axis) else None
+        )
+    inter = intra = unattributed = 0.0
+    inter_ops: list[dict] = []
+    for comp, kind, nbytes, label, line in _collective_ops(comps, default_n):
+        weighted = nbytes * mults.get(comp, 1)
+        groups = _replica_group_members(line, default_n)
+        if groups is None:
+            unattributed += weighted
+            continue
+        blocks = [{block(i) for i in grp} for grp in groups if grp]
+        if any(None in b for b in blocks):
+            # ids outside the caller's device map: neither side, loudly
+            # visible in unattributed_bytes rather than silently intra
+            unattributed += weighted
+            continue
+        crosses = any(len(b) > 1 for b in blocks)
+        if crosses:
+            inter += weighted
+            inter_ops.append({"bytes": weighted, "kind": kind, "op": label})
+        else:
+            intra += weighted
+    inter_ops.sort(key=lambda o: -o["bytes"])
+    return {
+        "inter_bytes": inter,
+        "intra_bytes": intra,
+        "unattributed_bytes": unattributed,
+        "inter_ops": inter_ops[:TOP_OPS],
+    }
+
+
 def loop_summary(hlo_text: str) -> list[dict]:
     """One record per while loop: body/cond computation names, the trip
     count, and the (unweighted) collective bytes inside the body."""
     comps = _split_computations(hlo_text)
     parents, whiles = _build_loop_graph(comps)
     body_bytes: dict[str, float] = {}
-    for comp, _kind, nbytes, _label in _collective_ops(
+    for comp, _kind, nbytes, _label, _line in _collective_ops(
         comps, _module_group_default(hlo_text)
     ):
         body_bytes[comp] = body_bytes.get(comp, 0.0) + nbytes

@@ -11,8 +11,12 @@ TPU adaptation of the paper's eq. 4 quantizer (Sec. II-B):
     paper's wire format ``Z*q + Z + 32`` bits, so the aggregation kernel
     (eq. 2) can consume the packed uplink directly.
 
-The fused aggregate kernel folds K clients' dequantize + weighted sum into
-one VMEM pass: out = sum_k w_k * sign_k * idx_k * (scale_k / levels_k).
+The fused aggregate kernel folds K clients' dequantize + weighted sum:
+out = sum_k w_k * sign_k * idx_k * (scale_k / levels_k). The client axis
+is a grid dimension (BLOCK_K clients per step, partial sum carried in VMEM
+across the k grid steps via output-block revisiting), so one kernel covers
+any K — from the paper's C = 8 uplink to a full 1024-client fleet —
+with constant VMEM footprint.
 """
 from __future__ import annotations
 
@@ -105,15 +109,31 @@ def dequantize(
     )(idx, signs, scale.reshape(1, 1))
 
 
-def _aggregate_kernel(idx_ref, sign_ref, coef_ref, out_ref, *, n_clients: int):
+def _aggregate_kernel(idx_ref, sign_ref, coef_ref, out_ref, *, block_k: int):
     """coef[k] = weights[k] * scales[k] / levels[k] precomputed on host —
-    the kernel is a pure weighted magnitude sum (one VMEM pass)."""
-    acc = jnp.zeros(out_ref.shape, jnp.float32)
-    for k in range(n_clients):  # static unroll: K is small (<= 32 experts.. clients)
-        mag = idx_ref[k].astype(jnp.float32)
-        val = jnp.where(sign_ref[k] > 0, -mag, mag)
-        acc = acc + coef_ref[0, k] * val
+    the kernel is a pure weighted magnitude sum.
+
+    The client axis is a grid dimension: grid = (m_blocks, k_blocks) with k
+    minor, so for each output tile the partial sum stays resident in VMEM
+    while the k steps stream BLOCK_K clients' planes at a time through it
+    (output-block revisiting). Any K works with constant VMEM footprint —
+    no static unroll of the whole fleet.
+    """
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, jnp.float32)
+
+    acc = out_ref[...]
+    for j in range(block_k):  # static unroll of the TILE only
+        mag = idx_ref[j].astype(jnp.float32)
+        val = jnp.where(sign_ref[j] > 0, -mag, mag)
+        acc = acc + coef_ref[0, j] * val
     out_ref[...] = acc
+
+
+BLOCK_K = 8
 
 
 def aggregate(
@@ -122,14 +142,17 @@ def aggregate(
     scales: jax.Array,   # (K,) fp32
     weights: jax.Array,  # (K,) fp32
     q_bits,              # int or (K,) array of per-client levels
-    *, interpret: bool = True, block_m: int = BLOCK_M,
+    *, interpret: bool = True, block_m: int = BLOCK_M, block_k: int = BLOCK_K,
 ) -> jax.Array:
+    """Fused dequantize + eq.-2 weighted sum over K wire payloads.
+
+    K and M are padded internally (zero-coefficient clients / zero rows), so
+    any active-set size and any lane-tiled length work; the output keeps the
+    caller's (M, 128) shape.
+    """
     k, m, lanes = idx.shape
     assert lanes == LANES, (
         f"aggregate expects lane-tiled (K, M, {LANES}) input, got idx {idx.shape}"
-    )
-    assert m % block_m == 0, (
-        f"aggregate: M={m} must be a multiple of block_m={block_m}"
     )
     assert signs.shape == idx.shape, (
         f"aggregate: signs {signs.shape} must match idx {idx.shape}"
@@ -151,17 +174,30 @@ def aggregate(
     )
     qb = jnp.broadcast_to(qb_in.astype(jnp.float32), (k,))
     levels = 2.0**qb - 1.0
-    coef = (weights * scales / levels).astype(jnp.float32).reshape(1, k)
-    kernel = functools.partial(_aggregate_kernel, n_clients=k)
-    return pl.pallas_call(
+    coef = (weights * scales / levels).astype(jnp.float32)
+
+    k_pad = (-k) % block_k
+    m_pad = (-m) % block_m
+    if k_pad or m_pad:
+        idx = jnp.pad(idx, ((0, k_pad), (0, m_pad), (0, 0)))
+        signs = jnp.pad(signs, ((0, k_pad), (0, m_pad), (0, 0)))
+        coef = jnp.pad(coef, (0, k_pad))  # zero coef: padding contributes 0
+    kp, mp = k + k_pad, m + m_pad
+
+    kernel = functools.partial(_aggregate_kernel, block_k=block_k)
+    out = pl.pallas_call(
         kernel,
-        grid=(m // block_m,),
+        grid=(mp // block_m, kp // block_k),
         in_specs=[
-            pl.BlockSpec((k, block_m, LANES), lambda i: (0, i, 0)),
-            pl.BlockSpec((k, block_m, LANES), lambda i: (0, i, 0)),
-            pl.BlockSpec((1, k), lambda i: (0, 0), memory_space=pl.ANY),
+            pl.BlockSpec((block_k, block_m, LANES), lambda i, kb: (kb, i, 0)),
+            pl.BlockSpec((block_k, block_m, LANES), lambda i, kb: (kb, i, 0)),
+            # NOT memory_space=ANY: the coef tile is windowed over the k
+            # grid axis, and automatic block slicing needs a concrete
+            # (VMEM) space — ANY hands the kernel the full-size ref.
+            pl.BlockSpec((1, block_k), lambda i, kb: (0, kb)),
         ],
-        out_specs=pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, LANES), jnp.float32),
+        out_specs=pl.BlockSpec((block_m, LANES), lambda i, kb: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, LANES), jnp.float32),
         interpret=interpret,
-    )(idx, signs, coef)
+    )(idx, signs, coef.reshape(1, kp))
+    return out[:m]

@@ -156,10 +156,11 @@ def make_fl_round(
 
     ``wire_packed``: beyond-paper optimization — the cross-client
     collective moves the paper's wire format (uint8 magnitude indexes +
-    uint8 signs + one fp32 range per client ~= Zq + Z + 32 bits at byte
-    granularity) instead of dequantized fp32, cutting inter-pod bytes 2x
-    (4x vs fp32 with bit-packed signs; we keep byte signs for lowering
-    simplicity and report the analytic factor). q is clamped to 8.
+    a bit-packed sign bitmap + one fp32 range per client ~= Zq + Z + 32
+    bits, i.e. Z + Z/8 bytes at q <= 8) instead of dequantized fp32,
+    cutting inter-pod bytes ~3.6x (ratio ~0.28); the signs are packed 8
+    per byte before the gather and unpacked on the receiving side, so the
+    numerics are identical to the byte-plane format. q is clamped to 8.
     """
     n_clients = mesh.shape[client_axis]
 
@@ -177,10 +178,41 @@ def make_fl_round(
     def fl_round(client_params, batch, q_bits, weights, key):
         """client_params: [K, ...] stacked; batch leaves: [K, B_local, ...];
         q_bits: (K,) int32; weights: (K,) fp32 (w_i = D_i / D^n)."""
+        from jax.sharding import NamedSharding
+
+        def replicate_over_clients(x):
+            # Force the payload across the client (pod) axis while leaving
+            # every other dim unconstrained (intra-pod FSDP/TP layout
+            # preserved). Both wire modes use this for the uplink: the
+            # paper's PS receives every scheduled client's upload and
+            # aggregates server-side (eq. 2), so the cross-pod bytes are
+            # the per-client payloads — uint8 wire vs dequantized fp32 —
+            # not an in-network reduce-first shortcut.
+            spec = P(None, *([P.UNCONSTRAINED] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec)
+            )
+
         new_params, losses = jax.vmap(local_step)(client_params, batch)
         keys = jax.random.split(key, n_clients)
         if wire_packed:
             qb = jnp.minimum(q_bits, 8)
+
+            def pack_signs(bits):
+                """{0,1} u8 leaf (..., d) -> (..., ceil(d/8)) u8 bitmap.
+
+                Packs along the LAST axis only (LSB first), so the leaf's
+                leading dims — where the intra-pod sharding lives — keep
+                their layout and the cross-pod gather stays a clean u8
+                window instead of a partitioner-hostile flat reshape.
+                """
+                d = bits.shape[-1]
+                pad = [(0, 0)] * (bits.ndim - 1) + [(0, (-d) % 8)]
+                b = jnp.pad(bits, pad).reshape(bits.shape[:-1] + (-1, 8))
+                bit_weights = 1 << jnp.arange(8, dtype=jnp.uint32)
+                return jnp.sum(
+                    b.astype(jnp.uint32) * bit_weights, axis=-1
+                ).astype(jnp.uint8)
 
             def client_wire(key_k, params_k, q_k):
                 leaves = jax.tree_util.tree_leaves(params_k)
@@ -195,7 +227,7 @@ def make_fl_round(
                     idx = lower + (u < (scaled - lower)).astype(jnp.float32)
                     return (
                         jnp.minimum(idx, levels).astype(jnp.uint8),
-                        (leaf < 0).astype(jnp.uint8),
+                        pack_signs((leaf < 0).astype(jnp.uint8)),
                     )
 
                 return jax.tree_util.tree_map(quant_leaf, params_k), tmax
@@ -204,30 +236,31 @@ def make_fl_round(
             levels = 2.0 ** qb.astype(jnp.float32) - 1.0
             coef = weights * theta_max / levels                   # (K,)
 
-            # Force the uint8 payload across the client axis BEFORE the
-            # dequant: a sharding constraint replicates the wire tree over
-            # 'pod' (an all-gather of u8 shards) while leaving every other
-            # dim unconstrained (intra-pod FSDP/TP layout preserved). The
-            # dequant + weighted sum then run on the gathered u8 payload.
-            # A naive auto-SPMD version lets XLA hoist the fp32 convert
-            # before the gather (no wire win), and a partial-manual
-            # shard_map loses the intra-pod sharding entirely — both
-            # measured and recorded in EXPERIMENTS.md §Perf.
-            from jax.sharding import NamedSharding
-
-            def replicate_over_clients(x):
-                spec = P(None, *([P.UNCONSTRAINED] * (x.ndim - 1)))
-                return jax.lax.with_sharding_constraint(
-                    x, NamedSharding(mesh, spec)
-                )
-
+            # The uint8 payload crosses the client axis BEFORE the dequant
+            # (an all-gather of u8 shards); the dequant + weighted sum then
+            # run on the gathered u8 payload. A naive auto-SPMD version
+            # lets XLA hoist the fp32 convert before the gather (no wire
+            # win), and a partial-manual shard_map loses the intra-pod
+            # sharding entirely — both measured and recorded in
+            # EXPERIMENTS.md §Perf.
             def agg_leaf(pair):
-                idx, sgn = pair                        # (K, ...) u8, pod-sharded
+                idx, sgn = pair    # (K, ..., d) u8 idx, (K, ..., n8) signs
                 idx_all = replicate_over_clients(idx)  # u8 crosses the pods
-                sgn_all = replicate_over_clients(sgn)
-                mag = idx_all.astype(jnp.float32)
-                val = jnp.where(sgn_all > 0, -mag, mag)
-                return jnp.einsum("k...,k->...", val, coef)
+                sgn_all = replicate_over_clients(sgn)  # 1 bit/sign crosses
+                # per-client slices + adds, NOT an einsum: a k-contraction
+                # invites the partitioner to re-shard the (already
+                # replicated) payload over pod and pay an fp32 all-reduce
+                # on the result; slicing a replicated operand is local.
+                out = None
+                for k in range(n_clients):
+                    mag = idx_all[k].astype(jnp.float32)
+                    bits = (sgn_all[k][..., None]
+                            >> jnp.arange(8, dtype=jnp.uint8)) & 1
+                    bits = bits.reshape(sgn_all[k].shape[:-1] + (-1,))
+                    bits = bits[..., : idx.shape[-1]]
+                    term = coef[k] * jnp.where(bits > 0, -mag, mag)
+                    out = term if out is None else out + term
+                return out
 
             is_pair = lambda x: (
                 isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
@@ -239,7 +272,9 @@ def make_fl_round(
             )(keys, new_params, q_bits)
             agg = jax.tree_util.tree_map(
                 lambda leaf: jnp.einsum(
-                    "k...,k->...", leaf.astype(jnp.float32), weights
+                    "k...,k->...",
+                    replicate_over_clients(leaf.astype(jnp.float32)),
+                    weights,
                 ).astype(leaf.dtype),
                 quantized,
             )

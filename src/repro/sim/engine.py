@@ -7,17 +7,26 @@ every round inside a single jitted ``lax.scan``:
 
   decision   — compiled greedy + vectorized KKT (``repro.sim.policy``)
   channel    — traced Rician/UMa rate draws (``repro.sim.channel``)
-  local work — vmapped tau-step SGD for all U clients (``repro.sim.fleet``)
-  aggregate  — masked quantize -> wire format -> fused dequant+weighted-sum
-               through the Pallas kernel (``repro.kernels.stochastic_quant``)
-               or a shape-identical dense einsum for huge fleets
+  compaction — ``jnp.take`` the S = min(U, C) scheduled clients' rows onto
+               the fixed slot axis (``FastDecision.slots``); everything
+               below is O(S), not O(U)
+  local work — vmapped tau-step SGD for the S active slots (``sim.fleet``)
+  aggregate  — quantize S wire planes -> fused dequant+weighted-sum through
+               the tiled Pallas kernel (``repro.kernels.stochastic_quant``),
+               which accumulates over a client grid axis — any S, no dense
+               einsum fallback
+  scatter    — masked ``.at[].add`` of the slot observations back into the
+               (U,) G²/σ²/θ EMA estimators in the scan carry
   queues     — Lyapunov lambda1/lambda2 updates carried in the scan state
 
 No per-client Python objects exist at run time: the fleet is four stacked
-arrays and the decision/energy/latency bookkeeping is all (U,)-vectorized.
-``run_host_policy`` is the per-round fallback engine that lets the host-side
-GA controller (``QCCFController``) or any ``repro.fl`` Policy drive the same
-compiled round execution when the closed-form fast path is not wanted.
+arrays, the decision bookkeeping is (U,)-vectorized, and the per-round
+training/wire work is (S,)-compacted. ``run_host_policy`` is the per-round
+fallback engine that lets the host-side GA controller (``QCCFController``)
+or any ``repro.fl`` Policy drive the same compiled (and equally compacted)
+round execution when the closed-form fast path is not wanted; it replays
+the scan's slot derivation and key schedule bit for bit (see the
+``repro.sim.fleet`` docstring for the per-slot key contract).
 """
 from __future__ import annotations
 
@@ -38,7 +47,10 @@ from repro.models import cnn
 from repro.sim import policy as fast_policy
 from repro.sim import search
 from repro.sim.channel import SimChannel
-from repro.sim.fleet import Fleet, build_fleet, ema_update, fleet_local_sgd
+from repro.sim.fleet import (
+    Fleet, build_fleet, ema_update, fleet_local_sgd, gather_active,
+    scatter_slots,
+)
 from repro.wireless.channel import ChannelModel, ChannelParams
 
 Pytree = Any
@@ -91,23 +103,33 @@ def _pad_len(z: int, block_m: int) -> int:
     return ((z + tile - 1) // tile) * tile
 
 
-def _quantize_wire(key: jax.Array, flat_u: jax.Array, q: jax.Array, q_cap: int):
-    """(U, Z) params + per-client traced q -> wire format (idx, sign, theta).
+def _quantize_wire(key: jax.Array, flat_s: jax.Array, q: jax.Array,
+                   q_cap: int, zpad: int):
+    """(S, Z) slot params + per-slot traced q -> Zpad-shaped wire planes.
 
     Same stochastic rounding as ``core.quantization.quantize_indices`` but
-    vectorized over the client axis with a traced per-client level; the
-    index plane dtype is sized statically from ``q_cap``.
+    vectorized over the slot axis with a traced per-slot level; the index
+    plane dtype is sized statically from ``q_cap``. The planes come out
+    already padded to the kernel tile (``zpad``) — padding coordinates are
+    exact zeros, so they quantize to index 0 / sign 0 and the scan body
+    carries no per-round re-padding. ``theta`` is the range over the real
+    Z coordinates (the zero padding never raises a max of |x|).
+
+    Key contract: the stochastic-rounding uniforms are one ``(S, zpad)``
+    draw from ``key`` — replays must quantize the same compacted slot
+    matrix to reproduce the stream.
     """
-    theta = jnp.max(jnp.abs(flat_u), axis=1)                     # (U,)
+    theta = jnp.max(jnp.abs(flat_s), axis=1)                     # (S,)
+    flat_p = jnp.pad(flat_s, ((0, 0), (0, zpad - flat_s.shape[1])))
     safe = jnp.where(theta > 0, theta, 1.0)
-    levels = 2.0 ** jnp.maximum(q, 1).astype(jnp.float32) - 1.0  # (U,)
-    scaled = jnp.abs(flat_u) * (levels / safe)[:, None]
+    levels = 2.0 ** jnp.maximum(q, 1).astype(jnp.float32) - 1.0  # (S,)
+    scaled = jnp.abs(flat_p) * (levels / safe)[:, None]
     lower = jnp.floor(scaled)
     frac = scaled - lower
-    u01 = jax.random.uniform(key, flat_u.shape, jnp.float32)
+    u01 = jax.random.uniform(key, flat_p.shape, jnp.float32)
     idx = jnp.minimum(lower + (u01 < frac).astype(jnp.float32), levels[:, None])
     dtype = jnp.uint8 if q_cap <= 8 else jnp.uint16
-    return idx.astype(dtype), (flat_u < 0).astype(jnp.uint8), theta
+    return idx.astype(dtype), (flat_p < 0).astype(jnp.uint8), theta
 
 
 class FleetSim:
@@ -128,7 +150,6 @@ class FleetSim:
         lr: float = 0.05,
         batch_size: int = 32,
         q_cap: int = 8,
-        aggregator: str = "auto",   # "pallas" | "dense" | "auto"
         block_m: int = 64,
         seed: int = 0,
         host_channel: Optional[ChannelModel] = None,
@@ -150,14 +171,8 @@ class FleetSim:
         self.lr = float(lr)
         self.batch_size = int(batch_size)
         self.q_cap = int(q_cap)
-        if aggregator == "auto":
-            # The fused kernel unrolls the client axis statically (built for
-            # the paper's K <= ~32 uplink); huge fleets take the dense
-            # einsum, which computes the identical masked weighted sum.
-            aggregator = "pallas" if fleet.n_clients <= 32 else "dense"
-        assert aggregator in ("pallas", "dense"), aggregator
-        self.aggregator = aggregator
         self.block_m = int(block_m)
+        self._zpad = _pad_len(self.z, self.block_m)
         self.seed = int(seed)
         self.host_channel = host_channel
         assert policy_mode in ("greedy", "host-ga", "compiled-ga"), policy_mode
@@ -173,28 +188,24 @@ class FleetSim:
 
     # ------------------------------------------------------------ round body
 
-    def _aggregate(self, idx, signs, theta, w_round, q):
-        """Masked eq.-2 aggregation over the wire planes -> (Zpad,) fp32."""
-        zpad = _pad_len(self.z, self.block_m)
-        pad = zpad - self.z
-        idx = jnp.pad(idx, ((0, 0), (0, pad)))
-        signs = jnp.pad(signs, ((0, 0), (0, pad)))
-        if self.aggregator == "pallas":
-            u = idx.shape[0]
-            out = sq.aggregate(
-                idx.reshape(u, -1, LANES),
-                signs.reshape(u, -1, LANES),
-                theta,
-                w_round,
-                jnp.maximum(q, 1),
-                block_m=self.block_m,
-            )
-            return out.reshape(-1)
-        levels = 2.0 ** jnp.maximum(q, 1).astype(jnp.float32) - 1.0
-        coef = w_round * theta / levels                      # (U,)
-        mag = idx.astype(jnp.float32)
-        signed = jnp.where(signs > 0, -mag, mag)
-        return jnp.einsum("uz,u->z", signed, coef)
+    def _aggregate(self, idx, signs, theta, w_slot, q_slot):
+        """Masked eq.-2 aggregation over S wire planes -> (Zpad,) fp32.
+
+        One code path for every active-set size: the tiled Pallas kernel
+        accumulates over its client grid axis, so there is no small-K
+        static-unroll limit and no dense ``(U, Zpad)`` einsum fallback.
+        The planes arrive Zpad-shaped from ``_quantize_wire``.
+        """
+        s = idx.shape[0]
+        out = sq.aggregate(
+            idx.reshape(s, -1, LANES),
+            signs.reshape(s, -1, LANES),
+            theta,
+            w_slot,
+            jnp.maximum(q_slot, 1),
+            block_m=self.block_m,
+        )
+        return out.reshape(-1)
 
     def _round_body(self, carry, key, with_eval: bool):
         flat, g_sq, sigma_sq, theta_max, lam1, lam2 = carry
@@ -220,24 +231,36 @@ class FleetSim:
                 rates, d_sizes, g_n, s_n, theta_max, lam2, sysp, z,
                 self.v_weight, q_cap=self.q_cap,
             )
-        af = dec.a.astype(jnp.float32)
+        # ---- active-set compaction: O(U) work ends with the decision.
+        # Everything below lives on the fixed S = min(U, C) slot axis.
+        u = self.fleet.n_clients
+        slots = dec.slots                                  # (S,) ids, -1 pad
+        sm = slots >= 0
+        cid = jnp.maximum(slots, 0)
 
         params = self.unravel(flat)
+        x_s, y_s, n_s = gather_active(self.fleet, slots)
         stacked, g_obs, s_obs = fleet_local_sgd(
             self.loss_fn, sysp.tau, self.batch_size, params,
-            self.fleet.x, self.fleet.y, self.fleet.n_samples, self.lr, k_batch,
+            x_s, y_s, n_s, self.lr, k_batch,
         )
-        flat_u = jax.vmap(lambda p: ravel_pytree(p)[0])(stacked)  # (U, Z)
+        flat_s = jax.vmap(lambda p: ravel_pytree(p)[0])(stacked)  # (S, Z)
 
-        idx, signs, theta = _quantize_wire(k_quant, flat_u, dec.q, self.q_cap)
-        d_n = jnp.sum(af * d_sizes)
-        w_round = jnp.where(dec.a > 0, af * d_sizes / jnp.maximum(d_n, 1e-12), 0.0)
-        agg = self._aggregate(idx, signs, theta, w_round, dec.q)
+        q_slot = jnp.take(dec.q, cid) * sm.astype(jnp.int32)
+        idx, signs, theta = _quantize_wire(
+            k_quant, flat_s, q_slot, self.q_cap, self._zpad
+        )
+        d_slot = jnp.take(d_sizes, cid) * sm.astype(jnp.float32)
+        d_n = jnp.sum(d_slot)
+        w_slot = d_slot / jnp.maximum(d_n, 1e-12)          # eq. 2 weights
+        agg = self._aggregate(idx, signs, theta, w_slot, q_slot)
         new_flat = jnp.where(d_n > 0, agg[: self.z], flat)
 
-        g_sq = ema_update(g_sq, g_obs, dec.a)
-        sigma_sq = ema_update(sigma_sq, s_obs, dec.a, floor=1e-8)
-        theta_max = jnp.where(dec.a > 0, theta, theta_max)
+        g_sq = ema_update(g_sq, scatter_slots(slots, g_obs, u), dec.a)
+        sigma_sq = ema_update(sigma_sq, scatter_slots(slots, s_obs, u),
+                              dec.a, floor=1e-8)
+        theta_max = jnp.where(dec.a > 0, scatter_slots(slots, theta, u),
+                              theta_max)
         lam1 = jnp.maximum(lam1 + dec.data_term - self.eps1, 0.0)
         lam2 = jnp.maximum(lam2 + dec.quant_term - self.eps2, 0.0)
 
@@ -332,24 +355,32 @@ class FleetSim:
     # ------------------------------------------------- host-policy fallback
 
     def _exec_fn(self, with_eval: bool = True):
-        """One compiled round execution for externally supplied decisions."""
+        """One compiled round execution for externally supplied decisions.
+
+        Takes the decision pre-compacted to the slot axis (``slots`` from
+        ``policy.compact_slots_host`` plus per-slot q and eq.-2 weights) and
+        replays ``_round_body``'s gather -> SGD -> quantize -> aggregate
+        exactly, so a host policy mirroring the compiled one reproduces the
+        scan bit for bit. All returned observations are per slot.
+        """
 
         @jax.jit
-        def exec_round(flat, a, q, w_round, key):
+        def exec_round(flat, slots, q_slot, w_slot, key):
             # identical key discipline to _round_body (k_ch unused: the
-            # caller already drew the rates), so a host policy replaying the
-            # compiled policy's decisions reproduces the scan bit-for-bit
+            # caller already drew the rates)
             _k_ch, k_batch, k_quant = jax.random.split(key, 3)
             params = self.unravel(flat)
+            x_s, y_s, n_s = gather_active(self.fleet, slots)
             stacked, g_obs, s_obs = fleet_local_sgd(
                 self.loss_fn, self.sysp.tau, self.batch_size, params,
-                self.fleet.x, self.fleet.y, self.fleet.n_samples, self.lr,
-                k_batch,
+                x_s, y_s, n_s, self.lr, k_batch,
             )
-            flat_u = jax.vmap(lambda p: ravel_pytree(p)[0])(stacked)
-            idx, signs, theta = _quantize_wire(k_quant, flat_u, q, self.q_cap)
-            agg = self._aggregate(idx, signs, theta, w_round, q)
-            new_flat = jnp.where(jnp.sum(w_round) > 0, agg[: self.z], flat)
+            flat_s = jax.vmap(lambda p: ravel_pytree(p)[0])(stacked)
+            idx, signs, theta = _quantize_wire(
+                k_quant, flat_s, q_slot, self.q_cap, self._zpad
+            )
+            agg = self._aggregate(idx, signs, theta, w_slot, q_slot)
+            new_flat = jnp.where(jnp.sum(w_slot) > 0, agg[: self.z], flat)
             if with_eval:
                 acc, loss = self.eval_fn(new_flat)
             else:
@@ -406,23 +437,47 @@ class FleetSim:
                 # same per-round GA key derivation as the compiled-ga scan
                 policy.set_round_key(jax.random.fold_in(keys[n], search.GA_KEY_TAG))
             dec = policy.decide(ctx)
-            d_n = float(np.sum(dec.a * d_sizes))
-            w_round = np.where(dec.a > 0, dec.a * d_sizes / max(d_n, 1e-12), 0.0)
             # clamp into the wire format: a uint8/uint16 index plane sized
             # for q_cap would silently wrap above it
             q_exec = np.clip(dec.q, 1, self.q_cap) * dec.a
             dec.q = np.where(dec.a > 0, q_exec, dec.q * 0)
-            q_arr = jnp.asarray(q_exec, jnp.int32)
+            # compacted replay: the same slot derivation as the compiled
+            # round body (drop unkept channels, stable channel-order slots)
+            assign = np.asarray(dec.assign)
+            a_np = np.asarray(dec.a)
+            assign_kept = np.where(
+                (assign >= 0) & (a_np[np.clip(assign, 0, u - 1)] > 0),
+                assign, -1,
+            )
+            slots = fast_policy.compact_slots_host(assign_kept, u)
+            mask = slots >= 0
+            cids = np.maximum(slots, 0)
+            # the compacted replay trains exactly the slot set; a Policy
+            # whose participation vector disagrees with its channel
+            # assignment (a client scheduled without a channel, or on two
+            # channels) would silently train the wrong set — fail loudly
+            sched_from_slots = np.sort(cids[mask])
+            sched_from_a = np.flatnonzero(a_np > 0)
+            assert np.array_equal(sched_from_slots, sched_from_a), (
+                "policy decision inconsistent: participation a="
+                f"{sched_from_a.tolist()} vs channel-assigned clients "
+                f"{sched_from_slots.tolist()} — every scheduled client "
+                "must hold exactly one channel (see policy.compact_slots)"
+            )
+            d_slot = np.where(mask, d_sizes[cids], 0.0)
+            w_slot = d_slot / max(float(d_slot.sum()), 1e-12)
+            q_slot = np.where(mask, q_exec[cids], 0)
             flat, g_obs, s_obs, theta, acc, loss = exec_round(
-                flat, jnp.asarray(dec.a, jnp.int32), q_arr,
-                jnp.asarray(w_round, jnp.float32), keys[n],
+                flat, jnp.asarray(slots, jnp.int32),
+                jnp.asarray(q_slot, jnp.int32),
+                jnp.asarray(w_slot, jnp.float32), keys[n],
             )
-            sched = dec.a.astype(bool)
-            g_sq[sched] = 0.7 * g_sq[sched] + 0.3 * np.asarray(g_obs)[sched]
-            sigma_sq[sched] = 0.7 * sigma_sq[sched] + 0.3 * np.maximum(
-                np.asarray(s_obs)[sched], 1e-8
+            sel = cids[mask]
+            g_sq[sel] = 0.7 * g_sq[sel] + 0.3 * np.asarray(g_obs)[mask]
+            sigma_sq[sel] = 0.7 * sigma_sq[sel] + 0.3 * np.maximum(
+                np.asarray(s_obs)[mask], 1e-8
             )
-            theta_max[sched] = np.asarray(theta)[sched]
+            theta_max[sel] = np.asarray(theta)[mask]
             policy.commit(dec)
             cum += dec.total_energy
             v_assigned = np.zeros(u)
@@ -475,7 +530,6 @@ def build_sim(
     seed: int = 0,
     batch_size: int = 32,
     q_cap: int = 8,
-    aggregator: str = "auto",
     block_m: int = 64,
     n_test: int = 1024,
     target_q: float = 6.0,
@@ -526,7 +580,7 @@ def build_sim(
     return FleetSim(
         fleet, params, loss_fn, eval_fn, channel, sysp,
         eps1=eps1, eps2=eps2, v_weight=v_weight, lr=lr,
-        batch_size=batch_size, q_cap=q_cap, aggregator=aggregator,
+        batch_size=batch_size, q_cap=q_cap,
         block_m=block_m, seed=seed, host_channel=host_channel,
         policy_mode=policy_mode, ga_config=ga_config,
     )

@@ -8,6 +8,19 @@ arrays (data, labels, per-client sample counts, sizes) padded to a common
 (:func:`repro.fl.client.sgd_scan_body`) trains every client at once, and
 per-client minibatch draws happen with ``jax.random`` inside the trace
 (indices are drawn in ``[0, n_i)`` so padding rows are never sampled).
+
+Active-set compaction (key-schedule contract)
+---------------------------------------------
+Per-round work runs on the *scheduled slot axis*, not the fleet axis: the
+engine gathers the S = min(U, C) scheduled clients' rows
+(:func:`gather_active` on ``FastDecision.slots``), trains only those, and
+scatters the G²/σ²/θ observations back (:func:`scatter_slots`). The SGD
+batch keys are therefore **per slot, not per client**:
+``split(k_batch, S)[s]`` feeds slot ``s`` (the client on channel-order
+position ``s``), and the quantizer's uniform draw is shaped ``(S, Zpad)``.
+Any replay (``FleetSim.run_host_policy``, numpy oracles) must derive the
+same slot vector (``policy.compact_slots_host``) to reproduce the stream
+bit for bit — a client's draws depend on its slot position, not its id.
 """
 from __future__ import annotations
 
@@ -60,6 +73,34 @@ def build_fleet(datasets: list[dict]) -> Fleet:
     )
 
 
+def gather_active(fleet: Fleet, slots: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Compact the fleet to the fixed-width scheduled-slot axis.
+
+    ``slots`` is the decision's (S,) client-id vector (-1 padded); padding
+    slots gather client 0's rows — their outputs are masked out downstream
+    (zero aggregation weight, masked scatter), so they are dead weight only.
+    Returns ``(x_s, y_s, n_s)`` with leading axis S.
+    """
+    cid = jnp.maximum(slots, 0)
+    return (
+        jnp.take(fleet.x, cid, axis=0),
+        jnp.take(fleet.y, cid, axis=0),
+        jnp.take(fleet.n_samples, cid, axis=0),
+    )
+
+
+def scatter_slots(slots: jax.Array, obs: jax.Array, n_clients: int) -> jax.Array:
+    """(S,) per-slot observations -> (U,) per-client, zeros elsewhere.
+
+    Real slots are injective (one channel per client after repair), so a
+    masked ``.at[].add`` is an exact scatter; padding slots (-1) are dropped.
+    """
+    mask = slots >= 0
+    cid = jnp.maximum(slots, 0)
+    zero = jnp.zeros((n_clients,), obs.dtype)
+    return zero.at[cid].add(jnp.where(mask, obs, jnp.zeros_like(obs)))
+
+
 def fleet_local_sgd(
     loss_fn: Callable,
     tau: int,
@@ -71,10 +112,15 @@ def fleet_local_sgd(
     lr: float,
     key: jax.Array,
 ) -> tuple[Pytree, jax.Array, jax.Array]:
-    """tau local SGD steps for every client at once (paper Fig. 1 step 3).
+    """tau local SGD steps for every gathered client at once (Fig. 1 step 3).
 
-    Returns ``(stacked_params, g_mean, g_var)`` with a leading U axis on
-    every params leaf; ``g_mean``/``g_var`` are the per-client G_i^2 and
+    The leading axis is whatever the caller hands in — the full fleet (U)
+    or, on the engine's hot path, the compacted active set (S slots from
+    :func:`gather_active`). ``key`` splits once per leading-axis row, which
+    is the per-slot key schedule documented in the module docstring.
+
+    Returns ``(stacked_params, g_mean, g_var)`` with that same leading axis
+    on every params leaf; ``g_mean``/``g_var`` are the per-client G_i^2 and
     sigma_i^2 observations that feed the controller's EMA estimators.
     """
     step = sgd_scan_body(loss_fn, lr)

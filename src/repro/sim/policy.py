@@ -90,6 +90,7 @@ class FastDecision:
     """Arrays-only decision record (the compiled Decision equivalent)."""
 
     assign: Any        # (C,) channel -> client
+    slots: Any         # (S,) scheduled-slot client ids, -1 padded; S = min(U, C)
     a: Any             # (U,) participation {0,1}
     q: Any             # (U,) integer levels (0 if out)
     f: Any             # (U,) CPU frequency (0 if out)
@@ -108,6 +109,28 @@ jax.tree_util.register_dataclass(
     data_fields=[f.name for f in dataclasses.fields(FastDecision)],
     meta_fields=[],
 )
+
+
+def compact_slots(assign: jax.Array, n_clients: int) -> jax.Array:
+    """(C,) kept assignment -> fixed-width (S,) scheduled-slot client ids.
+
+    S = min(U, C) is static, so the engine's per-round tensors can live on
+    the slot axis (active-set compaction) while the scan stays one compile.
+    Assigned channels come first in ascending channel order (stable sort of
+    the emptiness mask), then -1 padding; the assignment is injective after
+    repair, so each scheduled client owns exactly one slot.
+    """
+    s = min(n_clients, int(assign.shape[0]))
+    order = jnp.argsort(assign < 0)  # jnp sorts are stable
+    return jnp.take(assign, order[:s]).astype(jnp.int32)
+
+
+def compact_slots_host(assign: np.ndarray, n_clients: int) -> np.ndarray:
+    """Numpy mirror of :func:`compact_slots` (same slot order)."""
+    assign = np.asarray(assign)
+    s = min(n_clients, assign.shape[0])
+    order = np.argsort(assign < 0, kind="stable")
+    return assign[order[:s]].astype(np.int64)
 
 
 def _s_of_q(v, d, q, sysp: SystemParams, z: int):
@@ -372,7 +395,8 @@ def finish_decision(
         (assign >= 0) & a[jnp.clip(assign, 0, u - 1)], assign, -1
     )
     return FastDecision(
-        assign=assign_kept, a=a.astype(jnp.int32), q=q, f=f,
+        assign=assign_kept, slots=compact_slots(assign_kept, u),
+        a=a.astype(jnp.int32), q=q, f=f,
         v_assigned=jnp.where(a, v_assigned, 0.0), energy=energy,
         latency=latency, data_term=dt, quant_term=qt, payload_bits=payload,
     )
@@ -501,7 +525,8 @@ def finish_host(
     payload = float(np.sum(np.where(a, z * q + z + RANGE_BITS, 0.0)))
     assign_kept = np.where((assign >= 0) & a[np.clip(assign, 0, u - 1)], assign, -1)
     return FastDecision(
-        assign=assign_kept, a=a.astype(np.int64), q=q, f=f,
+        assign=assign_kept, slots=compact_slots_host(assign_kept, u),
+        a=a.astype(np.int64), q=q, f=f,
         v_assigned=np.where(a, v_assigned, 0.0), energy=energy,
         latency=latency, data_term=dt, quant_term=qt, payload_bits=payload,
     )

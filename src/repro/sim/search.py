@@ -206,7 +206,11 @@ def ga_decide(
     over ``cfg.generations`` x ``cfg.population`` evaluations (like the
     numpy ``run_ga``, the final generation's children are produced but not
     evaluated). If no chromosome was ever feasible the empty assignment is
-    returned (schedule nobody), matching ``run_ga``'s fallback.
+    returned (schedule nobody), matching ``run_ga``'s fallback. The
+    decision carries the fixed-width ``slots`` vector (via
+    ``finish_decision``), so GA-mode rounds feed the engine's compacted
+    round body exactly like the greedy fast path — an all-infeasible
+    search yields all ``-1`` slots and the round trains nothing real.
     """
     u, c = rates.shape
     assert c >= 2, "population search needs at least two channels"

@@ -67,6 +67,68 @@ def test_aggregate_hetero_unbiased_toward_source():
     assert float(jnp.abs(out - x).mean()) < step_coarsest
 
 
+@pytest.mark.parametrize("k", [8, 64, 1024])
+def test_tiled_aggregate_matches_oracle_at_scale(k):
+    """Satellite coverage for the client-grid accumulator: K up to a full
+    1024-client fleet, heterogeneous q_i, a non-divisible tail (M not a
+    multiple of BLOCK_M so the kernel pads internally), all through the
+    same numpy per-client dequantize + weighted-sum oracle."""
+    m = 40  # 40 % BLOCK_M != 0: exercises the internal M padding
+    rng = np.random.default_rng(k)
+    qs = rng.integers(1, 9, k)
+    levels = (2.0 ** qs - 1.0).astype(np.float64)
+    idx = (rng.integers(0, 256, (k, m, 128)) % (levels[:, None, None] + 1)).astype(np.uint8)
+    sgn = rng.integers(0, 2, (k, m, 128)).astype(np.uint8)
+    scales = rng.uniform(0.1, 2.0, k)
+    weights = rng.dirichlet(np.ones(k))
+
+    out = sq.aggregate(
+        jnp.asarray(idx), jnp.asarray(sgn), jnp.asarray(scales, jnp.float32),
+        jnp.asarray(weights, jnp.float32), jnp.asarray(qs, jnp.int32),
+        interpret=True,
+    )
+    assert out.shape == (m, 128)
+    mag = idx.astype(np.float64)
+    val = np.where(sgn > 0, -mag, mag)
+    coef = (weights * scales / levels).astype(np.float32).astype(np.float64)
+    expect = np.einsum("kml,k->ml", val, coef)
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-4, atol=1e-4)
+
+
+def test_tiled_aggregate_all_masked_is_zero():
+    """Every client masked out (weight 0) -> exactly zero output, whatever
+    the planes hold (the padded-K tail uses the same zero-coef mechanism)."""
+    k, m = 24, 256
+    rng = np.random.default_rng(7)
+    idx = rng.integers(0, 256, (k, m, 128)).astype(np.uint8)
+    sgn = rng.integers(0, 2, (k, m, 128)).astype(np.uint8)
+    out = sq.aggregate(
+        jnp.asarray(idx), jnp.asarray(sgn),
+        jnp.full((k,), 1e6, jnp.float32), jnp.zeros((k,), jnp.float32),
+        jnp.asarray(rng.integers(1, 9, k), jnp.int32), interpret=True,
+    )
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_tiled_aggregate_block_k_invariance():
+    """The k-grid tiling is an implementation detail: different block_k
+    values produce the same sums up to fp32 store-per-tile rounding."""
+    k, m = 20, 256
+    rng = np.random.default_rng(9)
+    idx = jnp.asarray(rng.integers(0, 200, (k, m, 128)).astype(np.uint8))
+    sgn = jnp.asarray(rng.integers(0, 2, (k, m, 128)).astype(np.uint8))
+    scales = jnp.asarray(rng.uniform(0.1, 2.0, k), jnp.float32)
+    weights = jnp.asarray(rng.dirichlet(np.ones(k)), jnp.float32)
+    qs = jnp.asarray(rng.integers(1, 9, k), jnp.int32)
+    outs = [
+        np.asarray(sq.aggregate(idx, sgn, scales, weights, qs,
+                                interpret=True, block_k=bk))
+        for bk in (1, 8, 32)
+    ]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5, atol=1e-5)
+
+
 def test_aggregate_validates_scales_and_weights_lengths():
     k = 3
     idx = jnp.zeros((k, M, 128), jnp.uint8)

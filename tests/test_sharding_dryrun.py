@@ -133,6 +133,36 @@ ENTRY %main (a: f32[2]) -> f32[2] {
     assert res["bytes"]["all-gather"] == 64 * 128 * 4 / 8
 
 
+def test_inter_axis_bytes_pod_attribution():
+    """Per-replica-group pod-crossing split: intra-pod groups, cross-pod
+    groups, iota+transpose groups, source_target_pairs permutes and
+    whitespace-laden explicit lists all attribute correctly."""
+    from repro.dist.hlo_analysis import inter_axis_bytes
+
+    hlo = """
+HloModule test, num_partitions=8
+
+ENTRY %main (a: f32[2]) -> f32[2] {
+  %a = f32[2] parameter(0)
+  %ar1 = f32[100] all-reduce(%x), replica_groups={{0,1}, {2,3}}, to_apply=%add
+  %ar2 = f32[200] all-reduce(%x), replica_groups={{0,4},{1,5}}, to_apply=%add
+  %ar3 = f32[300] all-reduce(%x), replica_groups=[4,2]<=[2,4]T(1,0), to_apply=%add
+  %cp = f32[400] collective-permute(%x), source_target_pairs={{0,1},{2,3}}
+  %cp2 = f32[500] collective-permute(%x), source_target_pairs={{0,4}}
+  ROOT %r = f32[2] copy(%a)
+}
+"""
+    pods = {i: i // 4 for i in range(8)}  # 2 pods of 4
+    res = inter_axis_bytes(hlo, pods)
+    # ar1 ({0,1},{2,3}) intra; ar2 ({0,4}) crosses; ar3 iota T(1,0) gives
+    # groups {0,4},{1,5},... -> crosses; cp intra pairs; cp2 crosses
+    assert res["intra_bytes"] == 100 * 4 + 400 * 4
+    assert res["inter_bytes"] == 200 * 4 + 300 * 4 + 500 * 4
+    assert res["unattributed_bytes"] == 0
+    kinds = {o["kind"] for o in res["inter_ops"]}
+    assert kinds == {"all-reduce", "collective-permute"}
+
+
 def test_batch_and_cache_specs():
     mesh = fake_mesh()
     batch = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32)}

@@ -1,4 +1,4 @@
-"""Engine mechanics: wire quantization, masked Pallas/dense aggregation,
+"""Engine mechanics: wire quantization, the tiled Pallas aggregation,
 the one-scan compiled run, and the host-policy fallback parity.
 """
 import os
@@ -16,36 +16,63 @@ from repro.sim.policy import HostFastPolicy
 
 @pytest.fixture(scope="module")
 def tiny_sim():
-    return build_sim("tiny", n_clients=8, seed=0, aggregator="pallas")
+    return build_sim("tiny", n_clients=8, seed=0)
 
 
-def _wire(u=5, z=5122, seed=0):
+def _wire(u=5, z=5122, seed=0, block_m=64):
+    zpad = engine._pad_len(z, block_m)
     flat_u = jax.random.normal(jax.random.PRNGKey(seed), (u, z)) * 0.3
     q = jnp.asarray(np.random.default_rng(seed).integers(1, 9, u), jnp.int32)
-    idx, signs, theta = engine._quantize_wire(jax.random.PRNGKey(seed + 1), flat_u, q, 8)
+    idx, signs, theta = engine._quantize_wire(
+        jax.random.PRNGKey(seed + 1), flat_u, q, 8, zpad
+    )
     return flat_u, q, idx, signs, theta
 
 
 def test_quantize_wire_error_bound():
     """Reconstruction error per coordinate <= one quantization step."""
     flat_u, q, idx, signs, theta = _wire()
+    z = flat_u.shape[1]
     levels = 2.0 ** q.astype(jnp.float32) - 1.0
-    deq = jnp.where(signs > 0, -1.0, 1.0) * idx.astype(jnp.float32) * (theta / levels)[:, None]
+    deq = (jnp.where(signs[:, :z] > 0, -1.0, 1.0)
+           * idx[:, :z].astype(jnp.float32) * (theta / levels)[:, None])
     step = (theta / levels)[:, None]
     assert float(jnp.max(jnp.abs(deq - flat_u) / step)) <= 1.0 + 1e-5
     assert idx.dtype == jnp.uint8  # q_cap <= 8 keeps the u8 wire format
 
 
-def test_pallas_and_dense_aggregators_agree(tiny_sim):
-    flat_u, q, idx, signs, theta = _wire(u=6, z=tiny_sim.z)
-    w = jnp.asarray(np.random.default_rng(1).dirichlet(np.ones(6)), jnp.float32)
-    agg_p = tiny_sim._aggregate(idx, signs, theta, w, q)
-    tiny_sim.aggregator = "dense"
-    try:
-        agg_d = tiny_sim._aggregate(idx, signs, theta, w, q)
-    finally:
-        tiny_sim.aggregator = "pallas"
-    np.testing.assert_allclose(np.asarray(agg_p), np.asarray(agg_d), rtol=1e-5, atol=1e-6)
+def test_quantize_wire_returns_padded_planes():
+    """Satellite: planes come out Zpad-shaped from the quantizer (pad once),
+    and the padding coordinates are exact zeros on both planes."""
+    z, block_m = 5122, 64
+    zpad = engine._pad_len(z, block_m)
+    flat_u, q, idx, signs, theta = _wire(z=z, block_m=block_m)
+    assert idx.shape == (5, zpad) and signs.shape == (5, zpad)
+    assert int(jnp.abs(idx[:, z:].astype(jnp.int32)).max()) == 0
+    assert int(signs[:, z:].max()) == 0
+    # theta is the range over the REAL coordinates only
+    np.testing.assert_allclose(
+        np.asarray(theta), np.abs(np.asarray(flat_u)).max(axis=1), rtol=1e-6
+    )
+
+
+def test_engine_aggregate_matches_dequantize_oracle(tiny_sim):
+    """The tiled kernel path == per-client dequantize + eq.-2 weighted sum,
+    at a slot count beyond the old static-unroll regime (no fallback)."""
+    from repro.core.quantization import dequantize_indices
+
+    for u, seed in ((6, 0), (40, 2)):
+        flat_u, q, idx, signs, theta = _wire(u=u, z=tiny_sim.z, seed=seed)
+        w = jnp.asarray(np.random.default_rng(seed).dirichlet(np.ones(u)),
+                        jnp.float32)
+        agg = np.asarray(tiny_sim._aggregate(idx, signs, theta, w, q))[: tiny_sim.z]
+        oracle = sum(
+            float(w[i]) * np.asarray(
+                dequantize_indices(idx[i], signs[i], theta[i], q[i])
+            )[: tiny_sim.z]
+            for i in range(u)
+        )
+        np.testing.assert_allclose(agg, oracle, rtol=1e-5, atol=1e-6)
 
 
 def test_aggregation_masks_unscheduled_clients(tiny_sim):
@@ -59,41 +86,8 @@ def test_aggregation_masks_unscheduled_clients(tiny_sim):
     np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned), rtol=1e-6)
 
 
-def test_dense_fallback_matches_dequantize_oracle_above_kernel_regime():
-    """U > 32 takes the dense-einsum aggregator (auto mode); pin it against
-    the per-client ``dequantize_indices`` + eq.-2 weighted-sum oracle of
-    tests/test_hetero_aggregation.py, which until now only covered the
-    Pallas small-K path."""
-    from repro.core.quantization import dequantize_indices
-
-    u = 40
-    sim = build_sim("tiny", n_clients=u, seed=5, n_test=64)
-    assert sim.aggregator == "dense"  # auto: beyond the kernel's K <= 32
-
-    flat_u = jax.random.normal(jax.random.PRNGKey(2), (u, sim.z)) * 0.4
-    q = jnp.asarray(np.random.default_rng(2).integers(1, 9, u), jnp.int32)
-    idx, signs, theta = engine._quantize_wire(jax.random.PRNGKey(3), flat_u, q, 8)
-    w = jnp.asarray(np.random.default_rng(3).dirichlet(np.ones(u)), jnp.float32)
-
-    agg = np.asarray(sim._aggregate(idx, signs, theta, w, q))[: sim.z]
-    oracle = sum(
-        float(w[i]) * np.asarray(dequantize_indices(idx[i], signs[i], theta[i], q[i]))
-        for i in range(u)
-    )
-    np.testing.assert_allclose(agg, oracle, rtol=1e-5, atol=1e-6)
-
-    # masking: zero-weight clients contribute nothing even with garbage planes
-    w0 = w.at[7].set(0.0).at[23].set(0.0)
-    base = np.asarray(sim._aggregate(idx, signs, theta, w0, q))
-    poisoned = np.asarray(sim._aggregate(
-        idx.at[7].set(255).at[23].set(255), signs, theta.at[7].set(1e6), w0, q
-    ))
-    np.testing.assert_allclose(base, poisoned, rtol=1e-6)
-
-
 def test_run_compiled_smoke_no_eval():
-    sim = build_sim("tiny", n_clients=16, seed=3, aggregator="dense",
-                    batch_size=8, n_test=64)
+    sim = build_sim("tiny", n_clients=16, seed=3, batch_size=8, n_test=64)
     res = sim.run_compiled(3, with_eval=False)
     u = 16
     assert res.q_levels.shape == (3, u) and res.rates.shape == (3, u)
@@ -106,12 +100,23 @@ def test_run_compiled_smoke_no_eval():
     assert np.all(res.rates[~sched] == 0)
 
 
+def test_run_compiled_rectangular_uplink():
+    """C < U: at most C clients are scheduled per round and the compacted
+    slot axis caps the per-round work at S = C."""
+    sim = build_sim("tiny", n_clients=16, n_channels=4, seed=3,
+                    batch_size=8, n_test=64)
+    res = sim.run_compiled(3, with_eval=False)
+    assert np.all(res.n_scheduled <= 4)
+    assert np.all(res.n_scheduled >= 1)
+    assert np.all(np.isfinite(res.energy))
+
+
 def test_scan_equals_host_policy_replay():
     """The one-scan engine and the per-round fallback engine driven by the
     numpy oracle produce the same experiment, decision for decision."""
-    sim_a = build_sim("tiny", n_clients=8, seed=1, aggregator="pallas", n_test=256)
+    sim_a = build_sim("tiny", n_clients=8, seed=1, n_test=256)
     res_c = sim_a.run_compiled(6)
-    sim_b = build_sim("tiny", n_clients=8, seed=1, aggregator="pallas", n_test=256)
+    sim_b = build_sim("tiny", n_clients=8, seed=1, n_test=256)
     pol = HostFastPolicy(sim_b.sysp, sim_b.eps1, sim_b.eps2, sim_b.v_weight, q_cap=8)
     res_h = sim_b.run_host_policy(pol, 6, channel="sim")
     acc_h = np.array([r.accuracy for r in res_h.records])
@@ -131,7 +136,7 @@ def test_shard_clients_smoke():
     """Client-axis sharding via the repro.dist rules on the host mesh."""
     from jax.sharding import Mesh
 
-    sim = build_sim("tiny", n_clients=8, seed=2, aggregator="dense", n_test=64)
+    sim = build_sim("tiny", n_clients=8, seed=2, n_test=64)
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
     sim.shard_clients(mesh, axis="data")
     res = sim.run_compiled(2, with_eval=False)
@@ -143,9 +148,9 @@ import jax, numpy as np
 from jax.sharding import Mesh
 from repro.sim import build_sim
 assert len(jax.devices()) == 8, jax.devices()
-sim = build_sim("tiny", n_clients=8, seed=4, aggregator="dense", n_test=64)
+sim = build_sim("tiny", n_clients=8, seed=4, n_test=64)
 base = sim.run_compiled(2, with_eval=False)
-sim2 = build_sim("tiny", n_clients=8, seed=4, aggregator="dense", n_test=64)
+sim2 = build_sim("tiny", n_clients=8, seed=4, n_test=64)
 sim2.shard_clients(Mesh(np.array(jax.devices()), ("data",)), axis="data")
 res = sim2.run_compiled(2, with_eval=False)
 np.testing.assert_array_equal(res.q_levels, base.q_levels)
@@ -177,6 +182,6 @@ def test_shard_clients_multidevice_subprocess_parity():
 
 
 def test_lower_only_dry_run():
-    sim = build_sim("tiny", n_clients=8, seed=0, aggregator="dense", n_test=64)
+    sim = build_sim("tiny", n_clients=8, seed=0, n_test=64)
     lowered = sim.lower(5, with_eval=False)
     assert "scan" in lowered.as_text() or len(lowered.as_text()) > 0

@@ -153,10 +153,10 @@ GA_CFG = GAConfig(generations=4, population=8, elitism=2,
 
 @pytest.fixture(scope="module")
 def ga_pair():
-    sim_a = build_sim("tiny", n_clients=8, seed=1, aggregator="pallas",
+    sim_a = build_sim("tiny", n_clients=8, seed=1,
                       n_test=256, policy_mode="compiled-ga", ga_config=GA_CFG)
     res_c = sim_a.run_compiled(N_ROUNDS)
-    sim_b = build_sim("tiny", n_clients=8, seed=1, aggregator="pallas",
+    sim_b = build_sim("tiny", n_clients=8, seed=1,
                       n_test=256, policy_mode="host-ga", ga_config=GA_CFG)
     res_h = sim_b.run(N_ROUNDS)
     return res_c, res_h
@@ -193,7 +193,7 @@ def test_engine_ga_cold_start_then_schedules(ga_pair):
 
 def test_engine_ga_mode_one_compile():
     """The whole GA experiment lowers as ONE scan (dry-run path)."""
-    sim = build_sim("tiny", n_clients=8, seed=0, aggregator="dense",
+    sim = build_sim("tiny", n_clients=8, seed=0,
                     n_test=64, policy_mode="compiled-ga", ga_config=GA_CFG)
     lowered = sim.lower(3, with_eval=False)
     assert len(lowered.as_text()) > 0
