@@ -1,7 +1,10 @@
 """Collective 'profiler': lower one combo and print the top collective ops
-by execution-weighted bytes with their JAX op_name provenance.
+by execution-weighted bytes with their JAX op_name provenance, plus the
+per-kind inter/intra-pod byte attribution (all-to-alls from the MoE
+expert dispatch show up here).
 
-  PYTHONPATH=src python benchmarks/collective_profile.py ARCH SHAPE [multi] [flround] [skip]
+  PYTHONPATH=src python benchmarks/collective_profile.py ARCH SHAPE \
+      [multi | mesh=1x4x2x16] [flround] [skip] [packed] [savemoe]
 """
 import os, sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -10,12 +13,17 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 def main():
     arch, shape_name = sys.argv[1], sys.argv[2]
     multi = "multi" in sys.argv
+    mesh_shape = next(
+        (a.split("=", 1)[1] for a in sys.argv if a.startswith("mesh=")), None
+    )
     fl = "flround" in sys.argv
     skip = "skip" in sys.argv
     from repro.configs import get_config, long_context_variant
-    from repro.dist.hlo_analysis import weighted_collectives
+    from repro.dist.hlo_analysis import (
+        inter_axis_bytes, pod_partition_map, weighted_collectives,
+    )
     from repro.launch import steps
-    from repro.launch.mesh import make_production_mesh
+    from repro.launch.mesh import make_production_mesh, mesh_label
     from repro.models.config import INPUT_SHAPES
     from repro.optim import adamw
 
@@ -23,7 +31,7 @@ def main():
     shape = INPUT_SHAPES[shape_name]
     if shape_name == "long_500k":
         cfg = long_context_variant(cfg)
-    mesh = make_production_mesh(multi_pod=multi)
+    mesh = make_production_mesh(multi_pod=multi, shape=mesh_shape)
     policy = "save_moe_out" if "savemoe" in sys.argv else "full"
     if fl:
         lowered = steps.lower_fl_round(cfg, mesh, shape,
@@ -37,9 +45,19 @@ def main():
         lowered = steps.lower_decode_step(cfg, mesh, shape)
     hlo = lowered.compile().as_text()
     res = weighted_collectives(hlo)
-    print(f"total weighted collective bytes/device: {res['total_bytes']/1e9:.2f} GB")
+    print(f"mesh {mesh_label(mesh)}: total weighted collective bytes/device: "
+          f"{res['total_bytes']/1e9:.2f} GB")
     for t in res["top_ops"]:
         print(f"  {t['bytes']/1e9:9.2f} GB  {t['kind']:18s} {t['op']}")
+    if mesh.shape.get("pod", 1) > 1:
+        split = inter_axis_bytes(hlo, pod_partition_map(mesh))
+        print(f"inter-pod {split['inter_bytes']/1e9:.2f} GB / "
+              f"intra-pod {split['intra_bytes']/1e9:.2f} GB / "
+              f"unattributed {split['unattributed_bytes']/1e9:.2f} GB")
+        for side in ("inter", "intra"):
+            for kind, b in sorted(split[f"{side}_by_kind"].items(),
+                                  key=lambda kv: -kv[1]):
+                print(f"  {side}-pod {b/1e9:9.2f} GB  {kind}")
 
 
 if __name__ == "__main__":

@@ -29,18 +29,14 @@ import os, sys, json
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import jax, numpy as np
 from repro.configs import get_config
-from repro.dist.hlo_analysis import inter_axis_bytes
+from repro.dist.hlo_analysis import inter_axis_bytes, pod_partition_map
 from repro.launch import steps
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import InputShape
 
 cfg = get_config("llama3_8b")
 mesh = make_production_mesh(multi_pod=True)
-# replica groups reference logical partition ids = positions in the
-# flattened (pod, data, model) device order, NOT device.id (the two only
-# coincide when the mesh does not permute devices)
-pod_size = mesh.devices.size // mesh.devices.shape[0]
-pods = {i: i // pod_size for i in range(mesh.devices.size)}
+pods = pod_partition_map(mesh)
 shape = InputShape("train_small", 512, 64, "train")
 out = {}
 for packed in (False, True):
@@ -100,6 +96,79 @@ def bench_wire_ratio(timeout: int = 1800) -> list[tuple]:
         "flround_wire_ratio[llama3_8b,2x16x16]", 0.0,
         f"inter_pod_ratio={ratio:.4f};u8_bytes={res['packed']:.0f}"
         f";fp32_bytes={res['fp32']:.0f};assert=lt0.3",
+    )]
+
+
+_MOE_A2A_SCRIPT = """
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.configs import get_config
+from repro.dist.hlo_analysis import (
+    inter_axis_bytes, pod_partition_map, weighted_collectives,
+)
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import INPUT_SHAPES
+from repro.optim import adamw
+
+cfg = get_config("granite_moe_1b_a400m")
+mesh = make_production_mesh(shape=(2, 8, 2, 16))   # pod x data x seq x model
+hlo = steps.lower_train_step(
+    cfg, mesh, INPUT_SHAPES["train_512"], adamw(3e-4)
+).compile().as_text()
+coll = weighted_collectives(hlo)
+split = inter_axis_bytes(hlo, pod_partition_map(mesh))
+print("MOE_A2A " + json.dumps({
+    "count": coll["counts"].get("all-to-all", 0),
+    "bytes": coll["bytes"].get("all-to-all", 0.0),
+    "intra_bytes": split["intra_by_kind"].get("all-to-all", 0.0),
+    "inter_bytes": split["inter_by_kind"].get("all-to-all", 0.0),
+}))
+"""
+
+
+def bench_moe_alltoall(timeout: int = 1800) -> list[tuple]:
+    """ROADMAP expert-parallel item: on the 4D (pod, data, seq, model)
+    mesh the MoE dispatch must lower to all-to-alls over the expert axis
+    (granite 32e on the 16-wide model axis), and — because the model axis
+    is innermost in the device order — that dispatch traffic must stay
+    intra-pod (the inter-pod links carry the FL uplink, not expert
+    routing). Runs in a subprocess for the 512-device XLA flag."""
+    import json as _json
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    env.pop("XLA_FLAGS", None)
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", _MOE_A2A_SCRIPT],
+            capture_output=True, text=True, timeout=timeout, env=env, cwd=root,
+        )
+    except subprocess.TimeoutExpired:
+        return [("moe_alltoall[granite,2x8x2x16]", 0.0,
+                 f"FAILED:timeout_after_{timeout}s")]
+    line = next(
+        (l for l in proc.stdout.splitlines() if l.startswith("MOE_A2A ")), None,
+    )
+    if proc.returncode != 0 or line is None:
+        return [("moe_alltoall[granite,2x8x2x16]", 0.0,
+                 f"FAILED:{proc.stderr[-200:]}")]
+    res = _json.loads(line[len("MOE_A2A "):])
+    assert res["count"] > 0, f"no all-to-all in the expert-sharded MoE: {res}"
+    # the expert dispatch rides the model axis (innermost, intra-pod); a
+    # small residue of batch-dim resharding over (pod, data) may cross
+    # pods, but it must stay noise next to the dispatch traffic
+    inter_frac = res["inter_bytes"] / max(res["bytes"], 1.0)
+    assert inter_frac < 0.01, (
+        f"expert dispatch leaked onto the inter-pod links: {res}"
+    )
+    return [(
+        "moe_alltoall[granite_moe_1b_a400m,2x8x2x16]", 0.0,
+        f"a2a_ops={res['count']};a2a_bytes={res['bytes']:.0f}"
+        f";intra_pod_bytes={res['intra_bytes']:.0f}"
+        f";inter_frac={inter_frac:.4f};assert=lt0.01",
     )]
 
 
@@ -163,6 +232,7 @@ def main() -> None:
                                 n_channels=8, ga_generations=8,
                                 ga_population=12))
     emit(bench_wire_ratio())
+    emit(bench_moe_alltoall())
     emit(simb.bench_sim_vs_object(u=8, n_rounds=10))
     emit(flb.bench_v_tradeoff(task="tiny", n_rounds=10))
     emit(flb.bench_task("femnist", betas=(300.0,), n_rounds=6))

@@ -1,15 +1,21 @@
-"""Sharding substrate: rule-based parameter specs, activation sharding
-constraints, and loop-aware HLO collective accounting.
+"""Sharding substrate: logical-axis mesh plans, rule-based parameter
+specs, activation sharding constraints, and loop-aware HLO collective
+accounting.
 
-Three modules, consumed by ``repro.launch`` / ``repro.models``:
+Four modules, consumed by ``repro.launch`` / ``repro.models`` /
+``repro.sim``:
 
+  * :mod:`repro.dist.plan` — the :class:`MeshPlan` logical-axis → mesh-axis
+    rule table, resolved once per mesh (2D/3D/4D ``(pod, data, seq,
+    model)``), with divisibility gating and no-axis-reuse;
   * :mod:`repro.dist.sharding` — PartitionSpec construction for params /
-    optimizer state / batches / KV caches on a named mesh;
+    optimizer state / batches / KV caches through a plan;
   * :mod:`repro.dist.activations` — ``shard_act`` constraints inside the
     model forward, active only under :func:`activation_mesh`;
   * :mod:`repro.dist.hlo_analysis` — compiled-HLO collective byte totals
-    weighted by while-loop trip counts (the dry-run roofline input).
+    weighted by while-loop trip counts (the dry-run roofline input),
+    with per-kind inter/intra-pod attribution.
 """
-from repro.dist import activations, hlo_analysis, sharding
+from repro.dist import activations, hlo_analysis, plan, sharding
 
-__all__ = ["activations", "hlo_analysis", "sharding"]
+__all__ = ["activations", "hlo_analysis", "plan", "sharding"]

@@ -1,78 +1,121 @@
 """Activation sharding constraints inside the model forward.
 
 The model code calls ``shard_act(x, pattern)`` at layout-critical points
-(post-projection heads, SwiGLU hidden, rwkv chunk tensors). Outside an
-:func:`activation_mesh` context this is an identity — eager smoke tests
-and the FL numerics tests never touch device placement. Under the
-context (the launcher's lowering paths) it becomes a
-``with_sharding_constraint``:
+(post-projection heads, SwiGLU hidden, MoE dispatch, rwkv chunk
+tensors). Outside an :func:`activation_mesh` context this is an identity
+— eager smoke tests and the FL numerics tests never touch device
+placement. Under the context (the launcher's lowering paths) it becomes
+a ``with_sharding_constraint`` resolved through the active
+:class:`repro.dist.plan.MeshPlan`:
 
-  * the pattern's head/feature dim is pinned to the ``model`` axis
-    (Megatron-style tensor parallelism), falling back to no constraint
-    when the axis does not divide the dim (e.g. 4-head reduced configs
-    on a 16-wide axis);
-  * the leading batch dim stays ``UNCONSTRAINED`` so XLA propagates
-    whatever the step's in_shardings chose (plain dp, or client x dp in
-    the federated round, where the same forward runs under ``vmap``);
-  * remaining dims replicate.
+  * each pattern maps to a tuple of *logical* dim names; the plan's rule
+    table resolves them to mesh axes with divisibility gating (e.g.
+    4-head reduced configs on a 16-wide ``model`` axis fall back to no
+    constraint);
+  * the leading batch dim (``act_batch``) stays ``UNCONSTRAINED`` so XLA
+    propagates whatever the step's in_shardings chose (plain dp, or
+    client x dp in the federated round, where the same forward runs
+    under ``vmap``);
+  * the sequence dim (``seq``) binds to the mesh's ``seq`` axis when one
+    exists — sequence parallelism for the 32k prefill shapes — and is a
+    no-op on 2D/3D meshes;
+  * the MoE patterns stage the dispatched ``(B, E, C, D)`` tensor
+    capacity-sharded on the expert axis (``becd_cap``) and then
+    expert-sharded (``becd``): the same mesh axis moving between dims of
+    one tensor is exactly the reshard XLA lowers to an **all-to-all**
+    (GShard-style expert dispatch), measurable via
+    ``repro.dist.hlo_analysis``.
 
-Patterns:  ``btd``  (B, T, D)          — layer boundary, D replicated
+Patterns:  ``bt``   (B, T)             — token ids, seq-sharded before
+                                          the embedding gather
+           ``btd``  (B, T, D)          — layer boundary, D replicated
            ``bshd`` (B, S, H, hd)      — attention heads on ``model``
            ``bsf``  (B, S, F)          — SwiGLU hidden on ``model``
-           ``h2``   (B, ?, H, ...)     — head axis at index 2
-           ``h3``   (B, ?, ?, H, ...)  — head axis at index 3
+           ``h2``   (B, S, H, ...)     — head axis at index 2
+           ``h3``   (B, S, ?, H, ...)  — head axis at index 3
+           ``bsec`` (B, S, E, C)       — MoE dispatch mask, seq-sharded
+           ``becd`` (B, E, C, D)       — expert-parallel compute layout
+           ``becd_cap`` (B, E, C, D)   — capacity-sharded a2a staging
 """
 from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Optional
+from typing import Optional, Union
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
-_ACTIVE_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
-    "repro_activation_mesh", default=None
+from repro.dist.plan import MeshPlan, make_plan
+
+_ACTIVE_PLAN: contextvars.ContextVar[Optional[MeshPlan]] = contextvars.ContextVar(
+    "repro_activation_plan", default=None
 )
 
-# pattern -> index of the dim pinned to the model axis (None: no tp dim)
-_MODEL_DIM = {"btd": None, "bshd": 2, "bsf": 2, "h2": 2, "h3": 3}
+# pattern -> logical dim names, left-aligned; trailing dims replicate.
+_PATTERN_DIMS = {
+    "bt": ("act_batch", "seq"),
+    "btd": ("act_batch", "seq", None),
+    "bshd": ("act_batch", "seq", "heads", "head_dim"),
+    "bsf": ("act_batch", "seq", "mlp"),
+    "h2": ("act_batch", "seq", "heads"),
+    "h3": ("act_batch", "seq", None, "heads"),
+    "bsec": ("act_batch", "seq", None, None),
+    "becd": ("act_batch", "expert", None, None),
+    "becd_cap": ("act_batch", None, "moe_capacity", None),
+}
 
 
 @contextlib.contextmanager
-def activation_mesh(mesh: Mesh):
-    """Enable ``shard_act`` constraints on ``mesh`` for the duration of a
-    ``jit(...).lower`` (or an actual execution) of a step function."""
-    token = _ACTIVE_MESH.set(mesh)
+def activation_mesh(mesh_or_plan: Union[Mesh, MeshPlan]):
+    """Enable ``shard_act`` constraints for the duration of a
+    ``jit(...).lower`` (or an actual execution) of a step function. A bare
+    :class:`Mesh` is wrapped in the default train plan."""
+    plan = (
+        mesh_or_plan
+        if isinstance(mesh_or_plan, MeshPlan)
+        else make_plan(mesh_or_plan)
+    )
+    if plan.mesh is None:
+        raise ValueError("activation_mesh needs a plan built on a real Mesh")
+    token = _ACTIVE_PLAN.set(plan)
     try:
-        yield mesh
+        yield plan
     finally:
-        _ACTIVE_MESH.reset(token)
+        _ACTIVE_PLAN.reset(token)
 
 
 def current_activation_mesh() -> Optional[Mesh]:
-    return _ACTIVE_MESH.get()
+    plan = _ACTIVE_PLAN.get()
+    return None if plan is None else plan.mesh
+
+
+def current_activation_plan() -> Optional[MeshPlan]:
+    return _ACTIVE_PLAN.get()
+
+
+def expert_dispatch_active(n_experts: int) -> bool:
+    """True when the active plan shards an ``n_experts``-wide expert axis
+    — the gate for the MoE a2a staging constraints. Without it, a mesh
+    that can shard the capacity dim but NOT the expert dim (grok's 8e on
+    a 16-wide ``model`` axis) would get a gratuitous shard-then-replicate
+    pair per layer instead of a no-op."""
+    plan = _ACTIVE_PLAN.get()
+    if plan is None:
+        return False
+    ent = plan.resolve(n_experts, "expert")
+    return ent is not None and plan.axis_size(ent) > 1
 
 
 def shard_act(x: jax.Array, pattern: str) -> jax.Array:
     """Constrain activation ``x`` per ``pattern``; identity outside an
     :func:`activation_mesh` context."""
-    if pattern not in _MODEL_DIM:
+    if pattern not in _PATTERN_DIMS:
         raise ValueError(
-            f"unknown shard_act pattern {pattern!r}; known: {sorted(_MODEL_DIM)}"
+            f"unknown shard_act pattern {pattern!r}; known: {sorted(_PATTERN_DIMS)}"
         )
-    mesh = _ACTIVE_MESH.get()
-    if mesh is None:
+    plan = _ACTIVE_PLAN.get()
+    if plan is None:
         return x
-    model_dim = _MODEL_DIM[pattern]
-    model_size = mesh.shape.get("model", 1)
-    entries: list = [None] * x.ndim
-    if x.ndim:
-        entries[0] = P.UNCONSTRAINED
-    if (
-        model_dim is not None
-        and model_dim < x.ndim
-        and x.shape[model_dim] % model_size == 0
-    ):
-        entries[model_dim] = "model"
-    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))
+    spec = plan.spec(x.shape, _PATTERN_DIMS[pattern], align="left")
+    return jax.lax.with_sharding_constraint(x, NamedSharding(plan.mesh, spec))

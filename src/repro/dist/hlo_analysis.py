@@ -29,9 +29,18 @@ Contract (consumed by ``launch/dryrun.py`` and the benchmarks):
   ``loop_summary(hlo) -> [{"body", "cond", "trip", "collective_bytes"}]``
 
   ``inter_axis_bytes(hlo, device_axis) -> {"inter_bytes", "intra_bytes",
-      "unattributed_bytes", "inter_ops"}`` — the weighted bytes split by
-  whether a collective's replica groups cross a device partition (e.g.
-  pods), for inter-pod wire accounting on multi-pod meshes.
+      "unattributed_bytes", "inter_ops", "inter_by_kind",
+      "intra_by_kind"}`` — the weighted bytes split by whether a
+  collective's replica groups cross a device partition (e.g. pods), for
+  inter-pod wire accounting on multi-pod meshes; the per-kind dicts
+  attribute each collective kind (notably the MoE dispatch
+  ``all-to-all``) to the inter/intra side separately.
+
+  ``full_length_intermediates(hlo, length) -> [{"op", "shape", "bytes",
+      "comp"}]`` — large per-device tensors that still carry a
+  full-``length`` dimension; on a ``seq``-sharded mesh this is the
+  assertion that no big activation was re-replicated along the sequence
+  axis (the dry-run gate for the 32k prefill shapes).
 """
 from __future__ import annotations
 
@@ -315,6 +324,18 @@ def weighted_collectives(hlo_text: str) -> dict:
     }
 
 
+def pod_partition_map(mesh) -> dict[int, int]:
+    """``{partition_id: pod_index}`` for a mesh whose LEADING device axis
+    is the pod axis. Replica groups in compiled HLO reference *logical
+    partition ids* — positions in the flattened device order — NOT
+    ``device.id``; the two only coincide when the mesh does not permute
+    devices, so every caller of :func:`inter_axis_bytes` must build its
+    map from the flattened order, which this helper centralizes."""
+    n = mesh.devices.size
+    pod_size = n // mesh.devices.shape[0]
+    return {i: i // pod_size for i in range(n)}
+
+
 def inter_axis_bytes(hlo_text: str, device_axis) -> dict:
     """Split the weighted collective bytes by device-partition crossing.
 
@@ -337,6 +358,8 @@ def inter_axis_bytes(hlo_text: str, device_axis) -> dict:
             lambda i: device_axis[i] if 0 <= i < len(device_axis) else None
         )
     inter = intra = unattributed = 0.0
+    inter_by_kind: dict[str, float] = {}
+    intra_by_kind: dict[str, float] = {}
     inter_ops: list[dict] = []
     for comp, kind, nbytes, label, line in _collective_ops(comps, default_n):
         weighted = nbytes * mults.get(comp, 1)
@@ -353,16 +376,79 @@ def inter_axis_bytes(hlo_text: str, device_axis) -> dict:
         crosses = any(len(b) > 1 for b in blocks)
         if crosses:
             inter += weighted
+            inter_by_kind[kind] = inter_by_kind.get(kind, 0.0) + weighted
             inter_ops.append({"bytes": weighted, "kind": kind, "op": label})
         else:
             intra += weighted
+            intra_by_kind[kind] = intra_by_kind.get(kind, 0.0) + weighted
     inter_ops.sort(key=lambda o: -o["bytes"])
     return {
         "inter_bytes": inter,
         "intra_bytes": intra,
         "unattributed_bytes": unattributed,
+        "inter_by_kind": inter_by_kind,
+        "intra_by_kind": intra_by_kind,
         "inter_ops": inter_ops[:TOP_OPS],
     }
+
+
+def full_length_intermediates(
+    hlo_text: str, length: int, *, min_bytes: int = 0, max_rank: int = 4,
+    ignore_last_dim: bool = True,
+) -> list[dict]:
+    """Per-device tensors that still carry a full-``length`` dim.
+
+    Compiled SPMD HLO shapes are *per-device*: a tensor whose sequence dim
+    was actually sharded over a ``seq`` axis of size s shows up as
+    ``length/s``, so any result shape still containing ``length`` exactly
+    was replicated (or gathered) along that dim. ``min_bytes`` filters the
+    small stuff (token ids, RoPE tables, masks); ``max_rank`` excludes the
+    stacked (L-leading) KV caches, which legitimately keep full sequence
+    length on the decode/prefill paths. Returns the offending ops sorted
+    by bytes, descending — empty means the seq sharding held everywhere.
+
+    Caveat: the match is purely numeric, so callers should pick shapes
+    where no *sharded* dim product collides with ``length`` — notably
+    ``global_batch != dp * seq`` (otherwise the per-device
+    ``B_loc * S_loc`` of a flattened matmul operand equals ``length``
+    and reads as a false positive). ``ignore_last_dim`` (default) skips
+    shapes whose ONLY full-length dim is the trailing one: in every
+    layout here the sequence dim of a big activation sits before the
+    feature dim, so a trailing match is a feature dim that merely equals
+    ``length`` (e.g. llama3's d_model == 4096 == the train_4k seq).
+    """
+    comps = _split_computations(hlo_text)
+    out: list[dict] = []
+    for comp, lines in comps.items():
+        for line in lines:
+            if "=" not in line:
+                continue
+            seg = line.split("=", 1)[1]
+            # result shapes come before the op's operand list
+            seg = seg.split("(", 1)[0]
+            for m in _SHAPE_RE.finditer(seg):
+                if not m.group(2):
+                    continue
+                dims = [int(d) for d in m.group(2).split(",")]
+                if len(dims) > max_rank or length not in dims:
+                    continue
+                if ignore_last_dim and length not in dims[:-1]:
+                    continue
+                n = 1
+                for d in dims:
+                    n *= d
+                nbytes = n * _dtype_nbytes(m.group(1))
+                if nbytes < min_bytes:
+                    continue
+                ml = _LHS_RE.match(line)
+                out.append({
+                    "op": ml.group(1) if ml else "?",
+                    "shape": m.group(0),
+                    "bytes": nbytes,
+                    "comp": comp,
+                })
+    out.sort(key=lambda o: -o["bytes"])
+    return out
 
 
 def loop_summary(hlo_text: str) -> list[dict]:

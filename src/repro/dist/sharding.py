@@ -1,130 +1,125 @@
 """Rule-based PartitionSpec construction for every pytree the launcher jits.
 
-Layout model (MaxText-style 2D/3D named meshes):
+Layout model (MaxText-style logical-axis names over 2D/3D/4D named
+meshes, resolved by :mod:`repro.dist.plan`):
 
   * ``model``        — tensor/expert parallelism: attention heads, SwiGLU
     hidden, the MoE expert axis, the vocab of the (un)tied embedding;
   * ``data`` (+ ``pod`` when present) — FSDP: one non-model dim of every
     large weight is sharded over the data axes in ``mode="train"``;
-    serving replicates params over ``data`` (``mode="serve"``).
+    serving replicates params over ``data`` (``mode="serve"``);
+  * ``seq``          — sequence parallelism for long-prefill activations
+    (a no-op on meshes without the axis).
 
-Two hard rules hold everywhere:
+This module owns the *leaf-name → logical-dim-names* tables; the
+*logical-name → mesh-axis* rules live in :func:`repro.dist.plan.default_rules`.
+Two hard invariants hold everywhere (enforced by the plan resolver):
 
   * the stacked-layer leading axis (``layers`` / ``enc_layers`` carry an
-    L-leading axis driven by ``lax.scan``) is NEVER sharded — rules are
-    right-aligned to the leaf's natural (unstacked) rank and extra
+    L-leading axis driven by ``lax.scan``) is NEVER sharded — dim names
+    are right-aligned to the leaf's natural (unstacked) rank and extra
     leading dims are replicated;
-  * every axis assignment is divisibility-checked by :func:`_pick`: a
-    mesh axis that does not divide the tensor dim falls back to
-    replication (e.g. seamless's 256206 vocab on a 16-wide ``model``
-    axis), never to an invalid sharding.
+  * every axis assignment is divisibility-checked: a mesh axis that does
+    not divide the tensor dim falls back to replication (e.g. seamless's
+    256206 vocab on a 16-wide ``model`` axis), never to an invalid
+    sharding.
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Optional, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.plan import MeshPlan, make_plan
 
 Pytree = Any
 
 _STACKED_TOP_KEYS = ("layers", "enc_layers")
 
 
-# ------------------------------------------------------------------ mesh
+# --------------------------------------------------- legacy mesh helpers
+# (kept for callers/tests that probe the divisibility gate directly)
 
 def mesh_axis_size(mesh: Mesh, axes) -> int:
-    """Product of the sizes of ``axes`` (a name, a tuple of names, or None).
-
-    Axis names absent from the mesh count as size 1 so rule tables can
-    mention ``pod`` without caring whether the mesh is multi-pod.
-    """
-    if axes is None:
-        return 1
-    if isinstance(axes, str):
-        axes = (axes,)
-    return math.prod(mesh.shape.get(a, 1) for a in axes)
-
+    """Product of the sizes of ``axes`` (a name, a tuple of names, or
+    None). Axis names absent from the mesh count as size 1 so rule tables
+    can mention ``pod`` without caring whether the mesh is multi-pod."""
+    return MeshPlan.build(mesh, {}).axis_size(axes)
 
 def _pick(mesh: Mesh, dim: int, axis_candidates: Sequence) -> Optional[Any]:
     """First candidate whose total mesh size divides ``dim``; None if none.
-
-    Candidates are axis names, tuples of names, or None (replicate —
-    always divides). This is the single divisibility gate every rule in
-    this module goes through.
-    """
+    The plan resolver applies the same gate through its rule tables."""
     for cand in axis_candidates:
         if dim % mesh_axis_size(mesh, cand) == 0:
             return cand
     return None
 
 
-def _dp_axes(mesh: Mesh, dp_override=None) -> tuple:
-    """The FSDP axes: ``dp_override`` verbatim (filtered to the mesh) when
-    given — the FL round passes the intra-pod axes only — else every
-    data-parallel axis the mesh has."""
-    axes = ("pod", "data") if dp_override is None else tuple(dp_override)
-    return tuple(a for a in axes if a in mesh.shape)
+# ------------------------------------------------------------- dim tables
 
+# Per-leaf logical names for the *natural* (unstacked) trailing dims,
+# right-aligned. None -> explicitly replicated.
+_ATTN_DIMS = {
+    "wq": ("embed", "heads", "head_dim"),       # (d, H, hd)
+    "wk": ("embed", "kv_heads", "head_dim"),    # (d, KV, hd)
+    "wv": ("embed", "kv_heads", "head_dim"),
+    "wo": ("heads", "head_dim", "embed"),       # (H, hd, d)
+}
+_MOE_DIMS = {
+    "router": ("embed", None),                  # (d, E) — router replicated on E
+    # expert parallelism on E; f stays replicated even when E does not
+    # divide the model axis (grok's 8e on a 16-wide axis) — the golden
+    # contract with the pre-refactor rules, see tests/test_mesh_plan.py
+    "wg": ("expert", "embed", None),            # (E, d, f)
+    "wu": ("expert", "embed", None),
+    "wd": ("expert", None, "embed"),            # (E, f, d)
+}
+_MLP_DIMS = {
+    "wg": ("embed", "mlp"),                     # (d, f)
+    "wu": ("embed", "mlp"),
+    "wd": ("mlp", "embed"),                     # (f, d)
+}
+_TM_DIMS = {                                    # rwkv6 time-mix
+    "wr": ("embed", "heads"), "wk": ("embed", "heads"),
+    "wv": ("embed", "heads"),
+    "wg": ("embed", "heads"),                   # (d, d): columns = H*hd
+    "wo": ("heads", "embed"),
+    "wa": ("embed", None), "wb": (None, "embed"),   # decay LoRA
+    "u": ("heads", "head_dim"),                 # (H, hd) bonus
+}
+_CM_DIMS = {                                    # rwkv6 channel-mix
+    "wk": ("embed", "mlp"),                     # (d, f)
+    "wv": ("mlp", "embed"),                     # (f, d)
+    "wr": ("embed", None),                      # (d, d) gate
+}
+_MAMBA_DIMS = {
+    "w_in": ("embed", "mamba_inner"),           # (d, 2*din + 2*N + H)
+    "w_out": ("mamba_inner", "embed"),          # (din, d)
+    "conv": (None, None),                       # (K, C) depthwise — tiny
+}
+_PARENT_DIMS = {
+    "attn": _ATTN_DIMS,
+    "xattn": _ATTN_DIMS,
+    "moe": _MOE_DIMS,
+    "mlp": _MLP_DIMS,
+    "tm": _TM_DIMS,
+    "cm": _CM_DIMS,
+    "mamba": _MAMBA_DIMS,
+}
 
-def _dp_candidates(dp: tuple) -> list:
-    """Progressively smaller dp-axis groups, ending in replication, so a
-    dim divisible by ``data`` but not ``pod*data`` still gets FSDP."""
-    cands: list = []
-    for i in range(len(dp)):
-        tail = dp[i:]
-        cands.append(tail[0] if len(tail) == 1 else tail)
-    cands.append(None)
-    return cands
-
-
-# ------------------------------------------------------------- rule table
-
-# Per-leaf roles for the *natural* (unstacked) trailing dims, right-aligned.
-# "dp" -> FSDP axes, "tp" -> the model axis, None -> replicated.
-_ATTN_RULES = {
-    "wq": ["dp", "tp", None],   # (d, H, hd)
-    "wk": ["dp", "tp", None],   # (d, KV, hd)
-    "wv": ["dp", "tp", None],
-    "wo": ["tp", None, "dp"],   # (H, hd, d)
-}
-_MOE_RULES = {
-    "router": ["dp", None],         # (d, E)
-    "wg": ["tp", "dp", None],       # (E, d, f) — expert parallelism on E
-    "wu": ["tp", "dp", None],
-    "wd": ["tp", None, "dp"],       # (E, f, d)
-}
-_MLP_RULES = {
-    "wg": ["dp", "tp"],             # (d, f)
-    "wu": ["dp", "tp"],
-    "wd": ["tp", "dp"],             # (f, d)
-}
-_TM_RULES = {                       # rwkv6 time-mix
-    "wr": ["dp", "tp"], "wk": ["dp", "tp"], "wv": ["dp", "tp"],
-    "wg": ["dp", "tp"],             # (d, d): columns = H*hd -> heads on tp
-    "wo": ["tp", "dp"],
-    "wa": ["dp", None], "wb": [None, "dp"],   # decay LoRA
-    "u": ["tp", None],              # (H, hd) bonus
-}
-_CM_RULES = {                       # rwkv6 channel-mix
-    "wk": ["dp", "tp"],             # (d, f)
-    "wv": ["tp", "dp"],             # (f, d)
-    "wr": ["dp", None],             # (d, d) gate
-}
-_MAMBA_RULES = {
-    "w_in": ["dp", "tp"],           # (d, 2*din + 2*N + H)
-    "w_out": ["tp", "dp"],          # (din, d)
-    "conv": [None, None],           # (K, C) depthwise — tiny, replicate
-}
-_PARENT_RULES = {
-    "attn": _ATTN_RULES,
-    "xattn": _ATTN_RULES,
-    "moe": _MOE_RULES,
-    "mlp": _MLP_RULES,
-    "tm": _TM_RULES,
-    "cm": _CM_RULES,
-    "mamba": _MAMBA_RULES,
+# KV/state caches carry a leading L (scan) axis; names cover the natural
+# per-layer rank, right-aligned, so the L axis replicates automatically.
+_CACHE_DIMS = {
+    "k": ("batch", "cache_seq", "kv_heads", "head_dim"),   # (B, Lc, KV, hd)
+    "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+    "mem_k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+    "mem_v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+    "s": ("batch", "heads", None, None),        # rwkv wkv state (B, H, hd, hd)
+    "ssm": ("batch", "heads", None, None),      # mamba state (B, H, N, hd)
+    "x_tm": ("batch", None),                    # token-shift carries (B, D)
+    "x_cm": ("batch", None),
+    "conv": ("batch", None, None),              # (B, K-1, C)
 }
 
 
@@ -132,43 +127,59 @@ def _path_keys(path) -> list[str]:
     return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
 
 
-def _leaf_roles(keys: list[str], mode: str) -> list:
+def _leaf_dims(keys: list[str]) -> tuple:
     name = keys[-1] if keys else ""
     parent = keys[-2] if len(keys) > 1 else ""
-    if name == "table":  # embed / lm_head: (V, d) — vocab on tp
-        return ["tp", "dp"] if mode == "train" else ["tp", None]
+    if name == "table":  # embed / lm_head: (V, d) — vocab on model
+        return ("vocab", "embed")
     if parent == "vis_proj" and name == "w":
-        return ["dp", "tp"]
-    rules = _PARENT_RULES.get(parent, {})
-    return list(rules.get(name, []))
+        return ("embed", "heads")
+    return tuple(_PARENT_DIMS.get(parent, {}).get(name, ()))
 
 
-def _spec_from_roles(mesh: Mesh, shape: tuple, roles: list, dp: tuple,
-                     *, protect_leading: bool = False) -> P:
-    """Right-align ``roles`` to ``shape``; extra leading dims replicate.
+# ---------------------------------------------------------- plan-first API
 
-    ``protect_leading`` additionally forces dim 0 to None even when the
-    roles are as long as the rank (stacked-layer safety net).
-    """
-    ndim = len(shape)
-    roles = roles[-ndim:] if len(roles) > ndim else roles
-    pad = ndim - len(roles)
-    full = [None] * pad + roles
-    dp_cands = _dp_candidates(dp)
-    out: list = []
-    for i, (dim, role) in enumerate(zip(shape, full)):
-        if role is None or (i == 0 and protect_leading):
-            out.append(None)
-        elif role == "tp":
-            out.append(_pick(mesh, dim, ["model", None]))
-        elif role == "dp":
-            out.append(_pick(mesh, dim, dp_cands))
-        else:  # explicit axis name / tuple in a rule
-            out.append(_pick(mesh, dim, [role, None]))
-    return P(*out)
+def param_specs(plan: MeshPlan, params: Pytree) -> Pytree:
+    """PartitionSpec tree matching ``params`` leaf-for-leaf, resolved
+    through ``plan``'s rule table."""
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        stacked = bool(keys) and keys[0] in _STACKED_TOP_KEYS
+        return plan.spec(
+            tuple(leaf.shape), _leaf_dims(keys), protect_leading=stacked
+        )
+
+    return jax.tree_util.tree_map_with_path(one, params)
 
 
-# ------------------------------------------------------------- public API
+def data_specs(plan: MeshPlan, batch: Pytree, *, leading: str = "batch") -> Pytree:
+    """Shard the leading dim of every leaf by the rule for ``leading``
+    (``"batch"`` for global batches, ``"clients"`` for fleet stacks);
+    all other dims replicate."""
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        return plan.spec(shape, (leading,), align="left")
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def cache_specs_plan(plan: MeshPlan, cache: Pytree) -> Pytree:
+    """Specs for decode caches: batch over FSDP axes, KV heads / state
+    heads over ``model``, ring metadata (slot_pos/pos) replicated."""
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        return plan.spec(tuple(leaf.shape), _CACHE_DIMS.get(name, ()))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# --------------------------------------------------- mesh-first wrappers
 
 def make_param_specs(
     mesh: Mesh, params: Pytree, *, mode: str = "train", dp_override=None,
@@ -180,20 +191,22 @@ def make_param_specs(
     ``dp_override`` restricts the FSDP axes (the FL round excludes the
     client axis so each client keeps a full model copy).
     """
-    if mode not in ("train", "serve"):
-        raise ValueError(f"mode must be 'train' or 'serve', got {mode!r}")
-    dp = _dp_axes(mesh, dp_override) if mode == "train" else ()
+    return param_specs(
+        make_plan(mesh, mode=mode, dp_override=dp_override), params
+    )
 
-    def one(path, leaf):
-        keys = _path_keys(path)
-        roles = _leaf_roles(keys, mode)
-        stacked = bool(keys) and keys[0] in _STACKED_TOP_KEYS
-        return _spec_from_roles(
-            mesh, tuple(leaf.shape), roles, dp, protect_leading=stacked
-        )
 
-    return jax.tree_util.tree_map_with_path(one, params)
+def batch_specs(mesh: Mesh, batch: Pytree, *, dp_override=None) -> Pytree:
+    """Shard the leading (global-batch) dim of every leaf over the FSDP
+    axes, divisibility permitting; all other dims replicate."""
+    return data_specs(make_plan(mesh, dp_override=dp_override), batch)
 
+
+def cache_specs(mesh: Mesh, cache: Pytree, *, dp_override=None) -> Pytree:
+    return cache_specs_plan(make_plan(mesh, dp_override=dp_override), cache)
+
+
+# ------------------------------------------------------------- opt / named
 
 def _is_spec(x) -> bool:
     # PartitionSpec subclasses tuple, so tree_map would flatten it without
@@ -217,50 +230,6 @@ def make_opt_specs(mesh: Mesh, opt_state: Pytree, param_specs: Pytree) -> Pytree
         return P()
 
     return rec(opt_state)
-
-
-def batch_specs(mesh: Mesh, batch: Pytree, *, dp_override=None) -> Pytree:
-    """Shard the leading (global-batch) dim of every leaf over the FSDP
-    axes, divisibility permitting; all other dims replicate."""
-    dp = _dp_axes(mesh, dp_override)
-    cands = _dp_candidates(dp)
-
-    def one(leaf):
-        shape = tuple(leaf.shape)
-        if not shape:
-            return P()
-        return P(_pick(mesh, shape[0], cands), *([None] * (len(shape) - 1)))
-
-    return jax.tree_util.tree_map(one, batch)
-
-
-# KV/state caches carry a leading L (scan) axis; roles cover the natural
-# per-layer rank, right-aligned, so the L axis replicates automatically.
-_CACHE_RULES = {
-    "k": ["dp", None, "tp", None],       # (B, Lc, KV, hd)
-    "v": ["dp", None, "tp", None],
-    "mem_k": ["dp", None, "tp", None],   # encdec cross k/v
-    "mem_v": ["dp", None, "tp", None],
-    "s": ["dp", "tp", None, None],       # rwkv wkv state (B, H, hd, hd)
-    "ssm": ["dp", "tp", None, None],     # mamba state (B, H, N, hd)
-    "x_tm": ["dp", None],                # token-shift carries (B, D)
-    "x_cm": ["dp", None],
-    "conv": ["dp", None, None],          # (B, K-1, C)
-}
-
-
-def cache_specs(mesh: Mesh, cache: Pytree, *, dp_override=None) -> Pytree:
-    """Specs for decode caches: batch over FSDP axes, KV heads / state
-    heads over ``model``, ring metadata (slot_pos/pos) replicated."""
-    dp = _dp_axes(mesh, dp_override)
-
-    def one(path, leaf):
-        keys = _path_keys(path)
-        name = keys[-1] if keys else ""
-        roles = _CACHE_RULES.get(name, [])
-        return _spec_from_roles(mesh, tuple(leaf.shape), roles, dp)
-
-    return jax.tree_util.tree_map_with_path(one, cache)
 
 
 def to_named(mesh: Mesh, specs: Pytree) -> Pytree:

@@ -16,10 +16,27 @@ For one (arch x input-shape x mesh) combination:
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_8b \
-      --shape train_4k [--multi-pod] [--fl-round] [--causal-skip] \
-      [--out results.json]
+      --shape train_4k [--multi-pod | --mesh-shape 1x4x2x16] [--fl-round] \
+      [--causal-skip] [--out results.json]
 
-Exit code 0 = lower+compile succeeded (the deliverable gate).
+``--mesh-shape`` takes a 2D/3D/4D shape mapped onto the trailing axes of
+``(pod, data, seq, model)``; a rank-4 shape activates sequence and
+expert parallelism through the logical-axis plan. Gates on top of
+lower+compile success:
+
+  --require-seq-sharded   fail unless no big per-device intermediate
+                          still carries the full sequence length
+                          (``hlo_analysis.full_length_intermediates``);
+  --require-alltoall      fail unless the compiled HLO contains
+                          all-to-all collectives (the MoE expert
+                          dispatch on an expert-sharded mesh).
+
+``--wire-ratio`` switches to the pod-scale wire accounting mode: the
+federated round is lowered in BOTH wire modes on the multi-pod mesh and
+the record carries the per-arch inter-pod byte ratio (uint8 wire / fp32
+payload) via ``hlo_analysis.inter_axis_bytes``.
+
+Exit code 0 = lower+compile (and every requested gate) succeeded.
 """
 import argparse
 import json
@@ -91,10 +108,12 @@ def while_trip_counts(hlo_text: str) -> list[int]:
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool, fl_round: bool,
-            causal_skip: bool) -> dict:
+            causal_skip: bool, mesh_shape=None,
+            require_seq_sharded: bool = False,
+            require_alltoall: bool = False) -> dict:
     import jax
     from repro.configs import get_config, long_context_variant
-    from repro.launch.mesh import make_production_mesh
+    from repro.launch.mesh import make_production_mesh, mesh_label
     from repro.launch import steps
     from repro.models.config import INPUT_SHAPES
     from repro.optim import adamw
@@ -103,13 +122,13 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, fl_round: bool,
     shape = INPUT_SHAPES[shape_name]
     if shape_name == "long_500k":
         cfg = long_context_variant(cfg)
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
     n_chips = mesh.devices.size
 
     t0 = time.time()
     if fl_round:
-        if not multi_pod:
-            raise ValueError("--fl-round requires the multi-pod mesh (clients = pods)")
+        if mesh.shape.get("pod", 1) < 2:
+            raise ValueError("--fl-round needs a pod axis >= 2 (clients = pods)")
         lowered = steps.lower_fl_round(cfg, mesh, shape)
         step_kind = "fl_round"
     elif shape.kind == "train":
@@ -129,7 +148,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, fl_round: bool,
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
-    from repro.dist.hlo_analysis import loop_summary, weighted_collectives
+    from repro.dist.hlo_analysis import (
+        full_length_intermediates, loop_summary, weighted_collectives,
+    )
     from repro.launch.analytic import analytic_record
 
     mem = compiled.memory_analysis()
@@ -139,6 +160,36 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, fl_round: bool,
     hlo = compiled.as_text()
     coll = weighted_collectives(hlo)        # loop-aware (primary)
     loops = loop_summary(hlo)
+
+    gates: dict = {}
+    if require_seq_sharded:
+        # Per-device shapes in compiled SPMD HLO are post-partition: any
+        # big tensor still carrying the FULL sequence length was
+        # replicated along seq. Threshold 2*B_local*S*d_model bytes keeps
+        # the inherent attention k/v window gathers (GQA: KV*hd << D) and
+        # token ids below the bar while catching every re-replicated
+        # layer-boundary / FFN / MoE activation.
+        dp = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+        b_loc = max(shape.global_batch // dp, 1)
+        min_bytes = 2 * b_loc * shape.seq_len * cfg.d_model
+        offenders = full_length_intermediates(
+            hlo, shape.seq_len, min_bytes=min_bytes
+        )
+        gates["seq_sharded_ok"] = not offenders
+        gates["full_seq_intermediates"] = offenders[:10]
+        if offenders:
+            raise AssertionError(
+                f"{len(offenders)} full-seq intermediates >= {min_bytes}B on a "
+                f"seq={mesh.shape.get('seq', 1)} mesh; top: {offenders[:3]}"
+            )
+    if require_alltoall:
+        n_a2a = coll["counts"].get("all-to-all", 0)
+        gates["alltoall_count"] = n_a2a
+        if not n_a2a:
+            raise AssertionError(
+                "no all-to-all in compiled HLO (expected expert-sharded "
+                f"MoE dispatch on mesh {dict(mesh.shape)})"
+            )
 
     flops = float(cost.get("flops", 0.0))
     bytes_acc = float(cost.get("bytes accessed", 0.0))
@@ -157,10 +208,11 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, fl_round: bool,
     record = {
         "arch": arch,
         "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": mesh_label(mesh),
         "step": step_kind,
         "n_chips": int(n_chips),
         "ok": True,
+        **gates,
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),
         "hlo_flops_per_device_raw": flops,
@@ -185,25 +237,81 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, fl_round: bool,
     return record
 
 
+def run_wire_ratio(arch: str, shape_name: str) -> dict:
+    """Pod-scale wire accounting (ROADMAP pod-scale item, second half):
+    lower the federated round on the 2x16x16 mesh in both wire modes and
+    record the per-arch inter-pod byte ratio (uint8 wire / fp32 payload)
+    via the replica-group pod-crossing attribution."""
+    from repro.configs import get_config
+    from repro.dist.hlo_analysis import inter_axis_bytes, pod_partition_map
+    from repro.launch import steps
+    from repro.launch.mesh import make_production_mesh, mesh_label
+    from repro.models.config import INPUT_SHAPES
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=True)
+    pods = pod_partition_map(mesh)
+
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_label(mesh),
+        "step": "fl_round_wire_ratio", "ok": True,
+    }
+    for packed in (False, True):
+        t0 = time.time()
+        hlo = steps.lower_fl_round(
+            cfg, mesh, shape, wire_packed=packed
+        ).compile().as_text()
+        r = inter_axis_bytes(hlo, pods)
+        mode = "packed" if packed else "fp32"
+        rec[f"{mode}_inter_bytes"] = r["inter_bytes"]
+        rec[f"{mode}_unattributed_bytes"] = r["unattributed_bytes"]
+        rec[f"{mode}_inter_by_kind"] = r["inter_by_kind"]
+        rec[f"{mode}_wall_s"] = round(time.time() - t0, 1)
+    # attribution must not silently degrade into the unattributed bucket
+    assert rec["fp32_inter_bytes"] > 0 and rec["packed_inter_bytes"] > 0, rec
+    assert max(
+        rec["fp32_unattributed_bytes"], rec["packed_unattributed_bytes"]
+    ) < 0.1 * rec["fp32_inter_bytes"], rec
+    rec["inter_pod_ratio"] = rec["packed_inter_bytes"] / rec["fp32_inter_bytes"]
+    return rec
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="explicit 2D/3D/4D mesh, e.g. 1x4x2x16 "
+                         "(pod x data x seq x model)")
     ap.add_argument("--fl-round", action="store_true")
     ap.add_argument("--causal-skip", action="store_true")
+    ap.add_argument("--require-seq-sharded", action="store_true")
+    ap.add_argument("--require-alltoall", action="store_true")
+    ap.add_argument("--wire-ratio", action="store_true",
+                    help="per-arch fl-round inter-pod byte-ratio record "
+                         "(both wire modes, 2x16x16 mesh)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     try:
-        rec = run_one(
-            args.arch, args.shape, multi_pod=args.multi_pod,
-            fl_round=args.fl_round, causal_skip=args.causal_skip,
-        )
+        if args.wire_ratio:
+            rec = run_wire_ratio(args.arch, args.shape)
+        else:
+            rec = run_one(
+                args.arch, args.shape, multi_pod=args.multi_pod,
+                fl_round=args.fl_round, causal_skip=args.causal_skip,
+                mesh_shape=args.mesh_shape,
+                require_seq_sharded=args.require_seq_sharded,
+                require_alltoall=args.require_alltoall,
+            )
     except Exception as e:  # noqa: BLE001 — the sweep wants the record
+        mesh_lbl = args.mesh_shape or (
+            "2x16x16" if (args.multi_pod or args.wire_ratio) else "16x16"
+        )
         rec = {
-            "arch": args.arch, "shape": args.shape,
-            "mesh": "2x16x16" if args.multi_pod else "16x16",
+            "arch": args.arch, "shape": args.shape, "mesh": mesh_lbl,
             "ok": False, "error": f"{type(e).__name__}: {e}",
             "traceback": traceback.format_exc()[-4000:],
         }

@@ -25,10 +25,16 @@ def main() -> None:
 
     from repro.ckpt import load_checkpoint
     from repro.configs import get_reduced
+    from repro.dist import sharding as shd
+    from repro.dist.plan import make_plan
+    from repro.launch.mesh import make_host_mesh
     from repro.models import decode_step, init_params
     from repro.models.decode import encode, init_cache, prefill
 
     cfg = get_reduced(args.arch)
+    # serve-mode plan: tensor parallelism only, params replicated over the
+    # data axes (a no-op placement on the 1x1 host mesh)
+    plan = make_plan(make_host_mesh(), mode="serve")
     key = jax.random.PRNGKey(args.seed)
     if args.ckpt_dir:
         params, meta = load_checkpoint(args.ckpt_dir)
@@ -36,6 +42,7 @@ def main() -> None:
         print(f"restored step {meta['step']}")
     else:
         params = init_params(cfg, key)
+    params = jax.device_put(params, plan.named(shd.param_specs(plan, params)))
 
     rng = np.random.default_rng(args.seed)
     b = args.batch

@@ -21,6 +21,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.quantization import quantize_pytree
 from repro.dist import sharding as shd
 from repro.dist.activations import activation_mesh
+from repro.dist.plan import make_plan
 from repro.launch.inputs import input_specs, train_batch_spec
 from repro.models import decode_step as model_decode_step
 from repro.models import forward_train, prefill
@@ -70,9 +71,10 @@ def lower_train_step(
     opt_state = jax.eval_shape(optimizer.init, params)
     batch = train_batch_spec(cfg, shape)
 
-    pspecs = shd.to_named(mesh, shd.make_param_specs(mesh, params))
-    ospecs = shd.to_named(mesh, shd.make_opt_specs(mesh, opt_state, pspecs))
-    bspecs = shd.to_named(mesh, shd.batch_specs(mesh, batch))
+    plan = make_plan(mesh)
+    pspecs = plan.named(shd.param_specs(plan, params))
+    ospecs = plan.named(shd.make_opt_specs(mesh, opt_state, pspecs))
+    bspecs = plan.named(shd.data_specs(plan, batch))
     metr_specs = None  # let xla choose for scalars
 
     jitted = jax.jit(
@@ -81,7 +83,7 @@ def lower_train_step(
         out_shardings=(pspecs, ospecs, metr_specs),
         donate_argnums=(0, 1),
     )
-    with activation_mesh(mesh):
+    with activation_mesh(plan):
         lowered = jitted.lower(params, opt_state, batch)
     return lowered
 
@@ -105,10 +107,11 @@ def lower_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape):
         batch = {"src_embeds": batch["src_embeds"], "tokens": batch["tokens"]}
     else:
         batch = {k: v for k, v in batch.items() if k in ("tokens", "vis_embeds")}
-    pspecs = shd.to_named(mesh, shd.make_param_specs(mesh, params, mode="serve"))
-    bspecs = shd.to_named(mesh, shd.batch_specs(mesh, batch))
+    plan = make_plan(mesh, mode="serve")
+    pspecs = plan.named(shd.param_specs(plan, params))
+    bspecs = plan.named(shd.data_specs(plan, batch))
     jitted = jax.jit(prefill_step, in_shardings=(pspecs, bspecs))
-    with activation_mesh(mesh):
+    with activation_mesh(plan):
         lowered = jitted.lower(params, batch)
     return lowered
 
@@ -126,16 +129,17 @@ def lower_decode_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape):
         abstract_params(cfg),
     )
     tokens, cache = decode_inputs_spec(cfg, shape)
-    pspecs = shd.to_named(mesh, shd.make_param_specs(mesh, params, mode="serve"))
-    cspecs = shd.to_named(mesh, shd.cache_specs(mesh, cache))
-    tspecs = shd.to_named(mesh, shd.batch_specs(mesh, tokens))
+    plan = make_plan(mesh, mode="serve")
+    pspecs = plan.named(shd.param_specs(plan, params))
+    cspecs = plan.named(shd.cache_specs_plan(plan, cache))
+    tspecs = plan.named(shd.data_specs(plan, tokens))
     jitted = jax.jit(
         serve_step,
         in_shardings=(pspecs, cspecs, tspecs),
         out_shardings=(None, cspecs),
         donate_argnums=(1,),
     )
-    with activation_mesh(mesh):
+    with activation_mesh(plan):
         lowered = jitted.lower(params, cache, tokens)
     return lowered
 
@@ -313,30 +317,31 @@ def lower_fl_round(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
     # within-client sharding excludes the client axis (clients own their
-    # full model copy; FSDP runs over the intra-pod 'data' axis only —
-    # unless 'data' IS the client axis, as on the 1x1 host mesh).
+    # full model copy; FSDP runs over the intra-pod axes only — unless
+    # e.g. 'data' IS the client axis, as on the 1x1 host mesh). The plan
+    # routes the stacked client axis through the 'clients' rule.
     intra_dp = tuple(
-        a for a in ("data",) if a in mesh.shape and a != client_axis
+        a for a in ("data", "seq") if a in mesh.shape and a != client_axis
     )
-    pspecs = shd.make_param_specs(mesh, params, dp_override=intra_dp)
-    cspecs = jax.tree_util.tree_map(
-        lambda s: P(client_axis, *s), pspecs, is_leaf=lambda x: isinstance(x, P)
-    )
-    cspecs = shd.to_named(mesh, cspecs)
-    # batch: client axis then the intra-client data axis (if any) on the
+    plan = make_plan(mesh, dp_override=intra_dp, client_axis=client_axis)
+    pspecs = shd.param_specs(plan, params)
+    cspecs = plan.named(jax.tree_util.tree_map(
+        lambda s: plan.stack(s, "clients", n_clients), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    ))
+    # batch: client axis then the intra-client data axes (if any) on the
     # local batch dim
-    local_dp = intra_dp[0] if intra_dp else None
-    bspecs = shd.to_named(mesh, {
-        k: P(client_axis, local_dp, *([None] * (v.ndim - 2)))
+    bspecs = plan.named({
+        k: plan.spec(v.shape, ("clients", "batch"), align="left")
         for k, v in per_client.items()
     })
-    rep = shd.to_named(mesh, P())
+    rep = plan.named(P())
     jitted = jax.jit(
         fl_round,
         in_shardings=(cspecs, bspecs, rep, rep, rep),
         out_shardings=(cspecs, None, None),
         donate_argnums=(0,),
     )
-    with activation_mesh(mesh):
+    with activation_mesh(plan):
         lowered = jitted.lower(client_params, per_client, q_bits, weights, key)
     return lowered

@@ -38,6 +38,9 @@ def main() -> None:
     from repro.ckpt import save_checkpoint
     from repro.configs import get_config, get_reduced
     from repro.core.quantization import quantize_pytree
+    from repro.dist import sharding as shd
+    from repro.dist.activations import activation_mesh
+    from repro.dist.plan import make_plan
     from repro.launch.mesh import make_host_mesh, make_production_mesh
     from repro.launch.steps import make_train_step
     from repro.models import init_params
@@ -45,11 +48,19 @@ def main() -> None:
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     mesh = make_host_mesh() if args.reduced else make_production_mesh()
+    plan = make_plan(mesh)
     opt = adamw(args.lr)
 
     key = jax.random.PRNGKey(args.seed)
     params = init_params(cfg, key)
     opt_state = opt.init(params)
+    # place params/optimizer through the logical-axis plan (a no-op on the
+    # 1x1 host mesh; FSDP+TP placement on a real slice)
+    pspecs = plan.named(shd.param_specs(plan, params))
+    params = jax.device_put(params, pspecs)
+    opt_state = jax.device_put(
+        opt_state, plan.named(shd.make_opt_specs(mesh, opt_state, pspecs))
+    )
     step_fn, _ = make_train_step(cfg, mesh, opt)
     step = jax.jit(step_fn, donate_argnums=(0, 1))
 

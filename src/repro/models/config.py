@@ -117,6 +117,10 @@ class InputShape:
 
 
 INPUT_SHAPES = {
+    # small train shape for the per-arch fl-round wire-ratio sweep (full
+    # arch weights dominate the uplink bytes; a short sequence keeps the
+    # 2x compile per arch affordable in the scheduled job)
+    "train_512": InputShape("train_512", 512, 64, "train"),
     "train_4k": InputShape("train_4k", 4_096, 256, "train"),
     "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
     "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),

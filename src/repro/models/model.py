@@ -388,7 +388,9 @@ def forward_train(
         tgt = layers.embed(params["embed"], batch["tokens"], dtype)
         h, aux = _forward_encdec(cfg, params, src, tgt, remat=remat)
     else:
-        x = shard_act(layers.embed(params["embed"], batch["tokens"], dtype), "btd")
+        x = shard_act(layers.embed(
+            params["embed"], shard_act(batch["tokens"], "bt"), dtype
+        ), "btd")
         if fam == "vlm":
             vis = batch["vis_embeds"].astype(dtype)
             vis = jnp.einsum("bnd,de->bne", vis, params["vis_proj"]["w"].astype(dtype))
@@ -422,7 +424,9 @@ def forward_logits(cfg: ModelConfig, params: Params, batch: dict) -> jax.Array:
         tgt = layers.embed(params["embed"], batch["tokens"], dtype)
         h, _ = _forward_encdec(cfg, params, src, tgt, remat=False)
     else:
-        x = shard_act(layers.embed(params["embed"], batch["tokens"], dtype), "btd")
+        x = shard_act(layers.embed(
+            params["embed"], shard_act(batch["tokens"], "bt"), dtype
+        ), "btd")
         if fam == "vlm":
             vis = batch["vis_embeds"].astype(dtype)
             vis = jnp.einsum("bnd,de->bne", vis, params["vis_proj"]["w"].astype(dtype))

@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.dist.activations import expert_dispatch_active, shard_act
 from repro.models import layers
 
 
@@ -103,10 +104,29 @@ def _moe_apply_dense(
     combine_tok = combine.reshape(b, s, top_k, e, capacity).sum(2)
 
     # --- expert computation --------------------------------------------
+    # Dispatch with an explicit all-to-all when the plan shards the expert
+    # axis: the dispatched (B,E,C,D) tensor is produced capacity-sharded on
+    # the expert mesh axis (a local slice of the seq-contracted einsum) and
+    # then re-constrained expert-sharded — the same axis moving between
+    # dims of one tensor is exactly the reshard XLA lowers to an
+    # all-to-all (GShard dispatch). The combine path reverses it. The
+    # staging pair is gated on the expert axis actually being sharded
+    # (expert_dispatch_active): a mesh that can shard the capacity dim but
+    # not E — grok's 8e on a 16-wide model axis — must keep the tensors
+    # unconstrained, not pay a shard-then-replicate pair per layer. All
+    # shard_act calls are identities outside an activation_mesh context.
+    disp_tokens = shard_act(disp_tokens, "bsec")
+    combine_tok = shard_act(combine_tok, "bsec")
+    a2a = expert_dispatch_active(e)
     xe = jnp.einsum("bsec,bsd->becd", disp_tokens.astype(dtype), x)  # (B,E,C,D)
+    if a2a:
+        xe = shard_act(xe, "becd_cap")
+        xe = shard_act(xe, "becd")                  # a2a: capacity -> expert
     g = jnp.einsum("becd,edf->becf", xe, params["wg"].astype(dtype))
     u = jnp.einsum("becd,edf->becf", xe, params["wu"].astype(dtype))
     y = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, params["wd"].astype(dtype))
+    if a2a:
+        y = shard_act(shard_act(y, "becd"), "becd_cap")  # a2a: expert -> cap
     out = jnp.einsum("bsec,becd->bsd", combine_tok.astype(dtype), y)
 
     # --- aux losses ------------------------------------------------------

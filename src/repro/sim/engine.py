@@ -501,12 +501,16 @@ class FleetSim:
 
     def shard_clients(self, mesh, axis: str = "data") -> None:
         """Distribute the client axis over a mesh axis via the repro.dist
-        rule table (divisibility-gated); computation follows the data."""
+        logical-axis plan: the stacked fleet arrays are annotated with the
+        ``clients`` logical name and the plan's rule table resolves it to
+        ``axis`` (divisibility-gated); computation follows the data."""
         from repro.dist import sharding as shd
+        from repro.dist.plan import make_plan
 
         batch = {"x": self.fleet.x, "y": self.fleet.y, "n": self.fleet.n_samples}
-        specs = shd.batch_specs(mesh, batch, dp_override=(axis,))
-        named = shd.to_named(mesh, specs)
+        plan = make_plan(mesh, client_axis=axis)
+        specs = shd.data_specs(plan, batch, leading="clients")
+        named = plan.named(specs)
         placed = {k: jax.device_put(v, named[k]) for k, v in batch.items()}
         self.fleet = dataclasses.replace(
             self.fleet, x=placed["x"], y=placed["y"], n_samples=placed["n"],

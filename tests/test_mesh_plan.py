@@ -1,0 +1,354 @@
+"""Logical-axis plan resolution: property tests + the golden regression.
+
+Two contracts pin the refactor:
+
+  * **validity** (property tests, hypothesis or the vendored minihyp
+    shim): for random mesh shapes x logical tables, every resolved spec
+    is divisibility-valid — each assigned mesh axis (group) divides its
+    dim, no axis is used twice within a spec, and no absent axis is ever
+    referenced;
+  * **golden parity**: on 2D/3D meshes the plan reproduces the
+    pre-refactor role-based rules EXACTLY, leaf for leaf, across every
+    arch / mode / dp_override — the refactor is a pure re-plumbing for
+    those shapes (the ``seq`` axis and the MoE a2a staging only activate
+    on 4D meshes). The reference resolver below is a verbatim port of
+    the pre-refactor ``dist/sharding.py`` role machinery.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_reduced
+from repro.dist import plan as dplan
+from repro.dist import sharding as shd
+from repro.models import abstract_params, cache_spec
+
+pytest.importorskip("hypothesis")  # real package or the conftest minihyp shim
+from hypothesis import given, settings, strategies as st
+
+P_IS_LEAF = lambda x: isinstance(x, P)
+
+
+# =====================================================================
+# reference: the pre-refactor role-based resolver (verbatim port)
+# =====================================================================
+
+class FakeMesh:
+    """Only ``mesh.shape`` is consulted by either resolver."""
+
+    def __init__(self, shape: dict):
+        self.shape = dict(shape)
+
+
+def _ref_axis_size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape.get(a, 1) for a in axes)
+
+
+def _ref_pick(mesh, dim, cands):
+    for cand in cands:
+        if dim % _ref_axis_size(mesh, cand) == 0:
+            return cand
+    return None
+
+
+def _ref_dp_axes(mesh, dp_override=None):
+    axes = ("pod", "data") if dp_override is None else tuple(dp_override)
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def _ref_dp_candidates(dp):
+    cands = []
+    for i in range(len(dp)):
+        tail = dp[i:]
+        cands.append(tail[0] if len(tail) == 1 else tail)
+    cands.append(None)
+    return cands
+
+
+_REF_ATTN = {
+    "wq": ["dp", "tp", None], "wk": ["dp", "tp", None],
+    "wv": ["dp", "tp", None], "wo": ["tp", None, "dp"],
+}
+_REF_PARENT = {
+    "attn": _REF_ATTN,
+    "xattn": _REF_ATTN,
+    "moe": {"router": ["dp", None], "wg": ["tp", "dp", None],
+            "wu": ["tp", "dp", None], "wd": ["tp", None, "dp"]},
+    "mlp": {"wg": ["dp", "tp"], "wu": ["dp", "tp"], "wd": ["tp", "dp"]},
+    "tm": {"wr": ["dp", "tp"], "wk": ["dp", "tp"], "wv": ["dp", "tp"],
+           "wg": ["dp", "tp"], "wo": ["tp", "dp"],
+           "wa": ["dp", None], "wb": [None, "dp"], "u": ["tp", None]},
+    "cm": {"wk": ["dp", "tp"], "wv": ["tp", "dp"], "wr": ["dp", None]},
+    "mamba": {"w_in": ["dp", "tp"], "w_out": ["tp", "dp"],
+              "conv": [None, None]},
+}
+_REF_CACHE = {
+    "k": ["dp", None, "tp", None], "v": ["dp", None, "tp", None],
+    "mem_k": ["dp", None, "tp", None], "mem_v": ["dp", None, "tp", None],
+    "s": ["dp", "tp", None, None], "ssm": ["dp", "tp", None, None],
+    "x_tm": ["dp", None], "x_cm": ["dp", None], "conv": ["dp", None, None],
+}
+
+
+def _ref_leaf_roles(keys, mode):
+    name = keys[-1] if keys else ""
+    parent = keys[-2] if len(keys) > 1 else ""
+    if name == "table":
+        return ["tp", "dp"] if mode == "train" else ["tp", None]
+    if parent == "vis_proj" and name == "w":
+        return ["dp", "tp"]
+    return list(_REF_PARENT.get(parent, {}).get(name, []))
+
+
+def _ref_spec_from_roles(mesh, shape, roles, dp, *, protect_leading=False):
+    ndim = len(shape)
+    roles = roles[-ndim:] if len(roles) > ndim else roles
+    full = [None] * (ndim - len(roles)) + roles
+    dp_cands = _ref_dp_candidates(dp)
+    out = []
+    for i, (dim, role) in enumerate(zip(shape, full)):
+        if role is None or (i == 0 and protect_leading):
+            out.append(None)
+        elif role == "tp":
+            out.append(_ref_pick(mesh, dim, ["model", None]))
+        elif role == "dp":
+            out.append(_ref_pick(mesh, dim, dp_cands))
+        else:
+            out.append(_ref_pick(mesh, dim, [role, None]))
+    return P(*out)
+
+
+def _ref_path_keys(path):
+    return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+
+
+def ref_param_specs(mesh, params, *, mode="train", dp_override=None):
+    dp = _ref_dp_axes(mesh, dp_override) if mode == "train" else ()
+
+    def one(path, leaf):
+        keys = _ref_path_keys(path)
+        roles = _ref_leaf_roles(keys, mode)
+        stacked = bool(keys) and keys[0] in ("layers", "enc_layers")
+        return _ref_spec_from_roles(
+            mesh, tuple(leaf.shape), roles, dp, protect_leading=stacked
+        )
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def ref_cache_specs(mesh, cache, *, dp_override=None):
+    dp = _ref_dp_axes(mesh, dp_override)
+
+    def one(path, leaf):
+        keys = _ref_path_keys(path)
+        roles = _REF_CACHE.get(keys[-1] if keys else "", [])
+        return _ref_spec_from_roles(mesh, tuple(leaf.shape), roles, dp)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def ref_batch_specs(mesh, batch, *, dp_override=None):
+    dp = _ref_dp_axes(mesh, dp_override)
+    cands = _ref_dp_candidates(dp)
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        return P(_ref_pick(mesh, shape[0], cands), *([None] * (len(shape) - 1)))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+# =====================================================================
+# golden regression: 2D/3D meshes reproduce the pre-refactor specs
+# =====================================================================
+
+GOLDEN_MESHES = [
+    {"data": 16, "model": 16},
+    {"pod": 2, "data": 16, "model": 16},
+    {"data": 1, "model": 1},
+    {"data": 3, "model": 5},
+    {"data": 8, "model": 4},
+]
+GOLDEN_ARCHS = [
+    "llama3_8b", "grok_1_314b", "granite_moe_1b_a400m", "rwkv6_7b",
+    "zamba2_7b", "seamless_m4t_large_v2", "internvl2_26b",
+]
+
+
+def _assert_tree_equal(a, b, ctx):
+    fa = jax.tree_util.tree_leaves_with_path(a, is_leaf=P_IS_LEAF)
+    fb = jax.tree_util.tree_leaves_with_path(b, is_leaf=P_IS_LEAF)
+    assert len(fa) == len(fb), ctx
+    for (pa, sa), (_pb, sb) in zip(fa, fb):
+        assert sa == sb, f"{ctx}{jax.tree_util.keystr(pa)}: {sa} != {sb}"
+
+
+@pytest.mark.parametrize("sizes", GOLDEN_MESHES,
+                         ids=["x".join(map(str, m.values())) for m in GOLDEN_MESHES])
+@pytest.mark.parametrize("arch", GOLDEN_ARCHS)
+def test_golden_param_specs_match_pre_refactor(sizes, arch):
+    fm = FakeMesh(sizes)
+    params = abstract_params(get_reduced(arch))
+    for mode in ("train", "serve"):
+        for dpo in (None, ("data",), ()):
+            ref = ref_param_specs(fm, params, mode=mode, dp_override=dpo)
+            new = shd.param_specs(
+                dplan.make_plan(sizes, mode=mode, dp_override=dpo), params
+            )
+            _assert_tree_equal(ref, new, f"{arch}/{mode}/dp={dpo}: ")
+
+
+@pytest.mark.parametrize("sizes", GOLDEN_MESHES[:3],
+                         ids=["x".join(map(str, m.values())) for m in GOLDEN_MESHES[:3]])
+def test_golden_cache_and_batch_specs(sizes):
+    fm = FakeMesh(sizes)
+    for arch in ("llama3_8b", "rwkv6_7b", "zamba2_7b", "seamless_m4t_large_v2"):
+        cache = cache_spec(get_reduced(arch), 32, 128)
+        _assert_tree_equal(
+            ref_cache_specs(fm, cache),
+            shd.cache_specs_plan(dplan.make_plan(sizes), cache),
+            f"cache/{arch}: ",
+        )
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+        "emb": jax.ShapeDtypeStruct((256, 64, 512), jnp.float32),
+        "scalar": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+    _assert_tree_equal(
+        ref_batch_specs(fm, batch),
+        shd.data_specs(dplan.make_plan(sizes), batch),
+        "batch: ",
+    )
+
+
+# =====================================================================
+# property tests: random mesh shapes x logical tables -> valid specs
+# =====================================================================
+
+_PROP_LOGICALS = (
+    None, "embed", "heads", "kv_heads", "head_dim", "mlp", "expert",
+    "vocab", "batch", "clients", "seq", "act_batch", "moe_capacity",
+)
+
+
+def _spec_axes(entry):
+    if entry is None or entry is dplan.UNCONSTRAINED:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    pod=st.integers(1, 4), data=st.integers(1, 16), seq=st.integers(1, 4),
+    model=st.integers(1, 16),
+    d0=st.integers(1, 96), d1=st.integers(1, 96), d2=st.integers(1, 96),
+    l0=st.integers(0, len(_PROP_LOGICALS) - 1),
+    l1=st.integers(0, len(_PROP_LOGICALS) - 1),
+    l2=st.integers(0, len(_PROP_LOGICALS) - 1),
+    mode_i=st.integers(0, 1),
+)
+def test_random_specs_always_divisibility_valid(
+    pod, data, seq, model, d0, d1, d2, l0, l1, l2, mode_i,
+):
+    sizes = {"pod": pod, "data": data, "seq": seq, "model": model}
+    plan = dplan.make_plan(
+        sizes, mode=("train", "serve")[mode_i], client_axis="pod"
+    )
+    shape = (d0, d1, d2)
+    dims = (_PROP_LOGICALS[l0], _PROP_LOGICALS[l1], _PROP_LOGICALS[l2])
+    for align in ("right", "left"):
+        spec = plan.spec(shape, dims, align=align)
+        assert len(spec) == len(shape)
+        used = []
+        for dim, entry in zip(shape, spec):
+            axes = _spec_axes(entry)
+            for a in axes:
+                assert a in sizes, f"absent axis {a} in {spec}"
+                assert a not in used, f"axis {a} reused in {spec}"
+                used.append(a)
+            group = math.prod(sizes[a] for a in axes)
+            assert dim % group == 0, (
+                f"{group} does not divide {dim} in {spec} for {dims}"
+            )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seq=st.integers(1, 8), model=st.integers(1, 8),
+    s_dim=st.integers(1, 64), h_dim=st.integers(1, 64),
+)
+def test_seq_rule_resolution(seq, model, s_dim, h_dim):
+    """The seq logical name binds to the seq mesh axis exactly when the
+    axis exists and divides; heads bind to model independently."""
+    plan = dplan.make_plan({"data": 2, "seq": seq, "model": model})
+    spec = plan.spec((8, s_dim, h_dim, 16),
+                     ("act_batch", "seq", "heads", "head_dim"), align="left")
+    # a seq axis of size 1 still divides — legal (and harmless) in a spec
+    expect_seq = "seq" if s_dim % seq == 0 else None
+    assert spec[1] == expect_seq
+    assert spec[2] == ("model" if h_dim % model == 0 else None)
+    assert spec[0] is dplan.UNCONSTRAINED
+    assert spec[3] is None
+
+
+def test_plan_unknown_logical_name_raises():
+    plan = dplan.make_plan({"data": 2, "model": 2})
+    with pytest.raises(KeyError):
+        plan.spec((4, 4), ("embed", "definitely_not_an_axis"))
+
+
+def test_no_reuse_within_one_spec():
+    """Two logical names resolving to the same mesh axis: first dim wins,
+    second falls back (expert + heads both target model)."""
+    plan = dplan.make_plan({"data": 2, "model": 4})
+    spec = plan.spec((8, 8), ("expert", "heads"))
+    assert spec == P("model", None)
+
+
+def test_4d_mesh_moe_and_seq_rules():
+    sizes = {"pod": 1, "data": 4, "seq": 2, "model": 16}
+    plan = dplan.make_plan(sizes)
+    # granite-style moe weights: E over model, d over (pod, data)
+    assert plan.spec((32, 1024, 512), ("expert", "embed", None)) == \
+        P("model", ("pod", "data"), None)
+    # activations: seq binds, capacity staging binds model
+    assert plan.spec((8, 4096, 2048), ("act_batch", "seq", "mlp"), align="left") \
+        == P(dplan.UNCONSTRAINED, "seq", "model")
+    assert plan.spec((8, 32, 160, 64), ("act_batch", None, "moe_capacity", None),
+                     align="left") == P(dplan.UNCONSTRAINED, None, "model", None)
+
+
+def test_clients_rule_and_stack():
+    """The federated round's stacked client axis routes through the
+    'clients' rule, skipping axes already used by the inner spec."""
+    plan = dplan.make_plan({"pod": 2, "data": 16, "model": 16},
+                           dp_override=("data",), client_axis="pod")
+    inner = plan.spec((4096, 32, 128), ("embed", "heads", "head_dim"))
+    assert inner == P("data", "model", None)
+    assert plan.stack(inner, "clients", 2) == P("pod", "data", "model", None)
+    # clients axis not divisible -> replicated, never invalid
+    assert plan.stack(inner, "clients", 3) == P(None, "data", "model", None)
+    # fleet-simulator style: clients over data
+    splan = dplan.make_plan({"data": 8}, client_axis="data")
+    specs = shd.data_specs(
+        splan, {"x": jax.ShapeDtypeStruct((1024, 32, 8, 8, 1), jnp.float32)},
+        leading="clients",
+    )
+    assert specs["x"] == P("data", None, None, None, None)
+
+
+def test_progressive_fsdp_degradation():
+    plan = dplan.make_plan({"pod": 2, "data": 16, "model": 4})
+    # divisible by data but not pod*data -> FSDP degrades to data alone
+    assert plan.spec((16, 48), (None, "embed")) == P(None, "data")
+    assert plan.spec((16, 64), (None, "embed")) == P(None, ("pod", "data"))
+    assert plan.spec((16, 3), (None, "embed")) == P(None, None)

@@ -1,9 +1,17 @@
 """Sharding rules + a miniature dry-run on a 1x1 mesh (CPU-safe).
 
-The full 16x16 / 2x16x16 sweep runs via benchmarks/dryrun_sweep.py in a
-separate process (the 512-device XLA flag must be set before jax init);
-here we validate the rule machinery itself.
+The full 16x16 / 2x16x16 / 1x4x2x16 sweep runs via
+benchmarks/dryrun_sweep.py in a separate process (the 512-device XLA
+flag must be set before jax init); here we validate the rule machinery
+itself, plus an 8-device subprocess regression for the 4D
+``(pod, data, seq, model)`` mesh: seq-sharded activations (no big
+full-seq intermediate survives) and the MoE dispatch lowering to
+all-to-alls.
 """
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -161,6 +169,121 @@ ENTRY %main (a: f32[2]) -> f32[2] {
     assert res["unattributed_bytes"] == 0
     kinds = {o["kind"] for o in res["inter_ops"]}
     assert kinds == {"all-reduce", "collective-permute"}
+
+
+def test_inter_axis_bytes_per_kind_split():
+    """The inter/intra split is additionally attributed per collective
+    kind — the measurement surface for the MoE dispatch all-to-alls."""
+    from repro.dist.hlo_analysis import inter_axis_bytes
+
+    hlo = """
+HloModule test, num_partitions=8
+
+ENTRY %main (a: f32[2]) -> f32[2] {
+  %a = f32[2] parameter(0)
+  %ar = f32[100] all-reduce(%x), replica_groups={{0,4}}, to_apply=%add
+  %a2a1 = f32[200] all-to-all(%x), replica_groups={{0,1},{2,3}}, dimensions={0}
+  %a2a2 = f32[300] all-to-all(%x), replica_groups={{0,4},{1,5}}, dimensions={0}
+  ROOT %r = f32[2] copy(%a)
+}
+"""
+    pods = {i: i // 4 for i in range(8)}
+    res = inter_axis_bytes(hlo, pods)
+    assert res["intra_by_kind"] == {"all-to-all": 200 * 4}
+    assert res["inter_by_kind"] == {"all-reduce": 100 * 4, "all-to-all": 300 * 4}
+    assert res["inter_bytes"] == 100 * 4 + 300 * 4
+    assert res["intra_bytes"] == 200 * 4
+
+
+def test_full_length_intermediates():
+    """Per-device tensors still carrying the full seq length are flagged;
+    small tensors and high-rank (stacked cache) tensors are not."""
+    from repro.dist.hlo_analysis import full_length_intermediates
+
+    hlo = """
+HloModule test
+
+ENTRY %main (a: f32[2]) -> f32[2] {
+  %a = f32[2] parameter(0)
+  %big = bf16[4,1024,512] fusion(%a), kind=kLoop
+  %halved = bf16[4,512,512] fusion(%a), kind=kLoop
+  %toks = s32[4,1024] parameter(1)
+  %cache = bf16[24,4,1024,8,64] fusion(%a), kind=kLoop
+  ROOT %r = f32[2] copy(%a)
+}
+"""
+    full = full_length_intermediates(hlo, 1024, min_bytes=100_000)
+    assert [o["op"] for o in full] == ["big"]
+    assert full[0]["bytes"] == 4 * 1024 * 512 * 2
+    # trailing-dim-only matches (a feature dim that merely equals the seq
+    # length) are skipped by default; rank-5 stacked caches always are
+    names = {o["op"] for o in full_length_intermediates(hlo, 1024)}
+    assert names == {"big"}
+    names = {o["op"] for o in full_length_intermediates(
+        hlo, 1024, ignore_last_dim=False)}
+    assert names == {"big", "toks"}
+
+
+_SEQ4D_SCRIPT = """
+import jax, re
+from repro.configs import get_reduced
+from repro.dist.hlo_analysis import full_length_intermediates, weighted_collectives
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import InputShape
+from repro.optim import adamw
+
+mesh = make_production_mesh(shape=(1, 2, 2, 2))
+assert dict(mesh.shape) == {"pod": 1, "data": 2, "seq": 2, "model": 2}
+
+# --- seq sharding: chunked-attention length, no big full-seq tensor ---
+cfg = get_reduced("llama3_8b")
+# S > DENSE_ATTN_MAX_SEQ so the 32k-prefill chunked path runs; B != dp*seq
+# so no flattened (B_loc*S_loc) dim collides with S (see hlo_analysis)
+B, S = 8, 2304
+hlo = steps.lower_train_step(
+    cfg, mesh, InputShape("t", S, B, "train"), adamw(1e-3)
+).compile().as_text()
+b_loc = B // 2
+min_bytes = 2 * b_loc * S * cfg.d_model
+full = full_length_intermediates(hlo, S, min_bytes=min_bytes)
+assert not full, ("full-seq intermediates survived seq sharding", full[:3])
+hlo_p = steps.lower_prefill_step(
+    cfg, mesh, InputShape("p", S, B, "prefill")
+).compile().as_text()
+full_p = full_length_intermediates(hlo_p, S, min_bytes=min_bytes)
+assert not full_p, ("prefill full-seq intermediates", full_p[:3])
+
+# --- expert sharding: the MoE dispatch lowers to all-to-alls ---
+cfg_moe = get_reduced("granite_moe_1b_a400m")
+hlo_moe = steps.lower_train_step(
+    cfg_moe, mesh, InputShape("t", 256, 8, "train"), adamw(1e-3)
+).compile().as_text()
+coll = weighted_collectives(hlo_moe)
+assert coll["counts"].get("all-to-all", 0) > 0, coll["counts"]
+print("SEQ4D-OK a2a=%d" % coll["counts"]["all-to-all"])
+"""
+
+
+def test_seq4d_mesh_subprocess_lowering():
+    """On 8 forced host devices, the 4D (pod, data, seq, model) mesh must
+    (a) lower train+prefill with genuinely seq-sharded activations — no
+    per-device intermediate above 2*B_loc*S*D bytes still carries the
+    full sequence length — and (b) lower the MoE dispatch to
+    all-to-alls. Subprocess because jax locks the device count at first
+    init."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.path.join(root, "src"),
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _SEQ4D_SCRIPT],
+        capture_output=True, text=True, timeout=540, env=env, cwd=root,
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "SEQ4D-OK" in proc.stdout
 
 
 def test_batch_and_cache_specs():
