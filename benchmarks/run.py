@@ -231,6 +231,13 @@ def main() -> None:
     emit(simb.bench_fleet_scale(u=32, n_rounds=4, batch_size=8, policy="ga",
                                 n_channels=8, ga_generations=8,
                                 ga_population=12))
+    # QCCF vs compiled baselines at matched accuracy (CPU-sized; the
+    # paper-scale U=1024 comparison is
+    #   PYTHONPATH=src python benchmarks/sim_benchmarks.py --baseline \
+    #       --scenario cellfree_a4 --clients 1024 --rounds 20 --json
+    # which also records rows into BENCH_sim.json)
+    emit(simb.bench_baseline_energy(u=64, n_rounds=10, batch_size=8,
+                                    n_channels=8, scenario="single_bs"))
     emit(bench_wire_ratio())
     emit(bench_moe_alltoall())
     emit(simb.bench_sim_vs_object(u=8, n_rounds=10))

@@ -10,11 +10,17 @@ rounds/sec with compile time split out:
 
 ``--policy=ga`` swaps the greedy fast path for the fully compiled GA
 (``repro.sim.search``) — the whole Algorithm 1 population search runs inside
-the same one-compile scan. ``--dry-run`` traces + lowers the full scan
+the same one-compile scan; the four paper baselines (``no_quant``,
+``channel_allocate``, ``principle``, ``same_size``) are also valid
+``--policy`` values and run as traced decision functions in the same scan.
+``--scenario`` selects a registered scenario preset (``single_bs``,
+``cellfree_a4``, ``noniid_a01`` — see ``repro.sim.scenario``); ``--baseline``
+runs the QCCF-vs-baselines energy/accuracy comparison on one scenario
+(``bench_baseline_energy``). ``--dry-run`` traces + lowers the full scan
 without executing (the CI manual-dispatch job uses this: lowering success is
 the gate, no CPU burn). ``--json`` appends machine-readable rows to
 ``BENCH_sim.json`` at the repo root (rounds/sec, compile_s, U, C, policy,
-aggregator) so the perf trajectory across PRs stays recorded.
+scenario, aggregator) so the perf trajectory across PRs stays recorded.
 """
 from __future__ import annotations
 
@@ -29,6 +35,11 @@ sys.path.insert(0, os.path.join(ROOT, "src"))
 
 BENCH_JSON = os.path.join(ROOT, "BENCH_sim.json")
 
+# benchmark-CLI spelling -> engine policy_mode (baselines pass through)
+_POLICY_MODES = {"greedy": "greedy", "ga": "compiled-ga"}
+BENCH_POLICIES = ("greedy", "ga", "no_quant", "channel_allocate",
+                  "principle", "same_size")
+
 
 def bench_fleet_scale(
     u: int = 1024,
@@ -41,7 +52,8 @@ def bench_fleet_scale(
     seed: int = 0,
     dry_run: bool = False,
     with_eval: bool = False,
-    policy: str = "greedy",       # "greedy" | "ga" (compiled-ga in the scan)
+    policy: str = "greedy",       # see BENCH_POLICIES
+    scenario: str | None = None,  # registered preset name, None = legacy
     ga_generations: int = 30,
     ga_population: int = 32,
     json_rows: list | None = None,
@@ -49,53 +61,59 @@ def bench_fleet_scale(
     """U-client QCCF rounds in one compiled scan; rows are run.py-style CSV.
 
     ``n_channels`` defaults to the paper's sparse uplink (C = 8); pass
-    ``None`` for the dense C = U layout. When ``json_rows`` is a list, a
-    machine-readable record is appended per executed config.
+    ``None`` for the dense C = U layout. ``scenario`` picks a registered
+    preset (topology + heterogeneity + Lyapunov constants travel as one
+    pytree through ``build_sim``); ``policy`` can be the greedy fast path,
+    the compiled GA, or any traced baseline. When ``json_rows`` is a list,
+    a machine-readable record is appended per executed config.
     """
     import jax
     from repro.core.genetic import GAConfig
     from repro.sim import build_sim
 
-    assert policy in ("greedy", "ga"), policy
-    policy_mode = "compiled-ga" if policy == "ga" else "greedy"
+    assert policy in BENCH_POLICIES, policy
+    policy_mode = _POLICY_MODES.get(policy, policy)
     ga_config = GAConfig(
         generations=ga_generations, population=ga_population,
         repair_infeasible=True,
     )
     c = u if n_channels is None else int(n_channels)
+    scen = scenario or "single_bs"
+    tag = f"U={u},C={c},{task},{scen},{policy}"
     rows = []
     t0 = time.time()
     sim = build_sim(
-        task, n_clients=u, n_channels=c, mu=mu, beta=beta, seed=seed,
-        batch_size=batch_size, n_test=256,
+        task, scenario=scenario, n_clients=u, n_channels=c, mu=mu, beta=beta,
+        seed=seed, batch_size=batch_size, n_test=256,
         policy_mode=policy_mode, ga_config=ga_config,
     )
     build_s = time.time() - t0
     rows.append((
-        f"sim_build[U={u},C={c},{task},{policy}]", build_s * 1e6,
-        f"z={sim.z};n_max={int(sim.fleet.x.shape[1])};policy={policy_mode}",
+        f"sim_build[{tag}]", build_s * 1e6,
+        f"z={sim.z};n_max={int(sim.fleet.x.shape[1])};policy={policy_mode}"
+        f";A={sim.channel.n_aps};assoc={sim.channel.association}",
     ))
 
-    keys = jax.random.split(jax.random.PRNGKey(sim.seed + 1), n_rounds)
+    keys, ridx = sim._scan_xs(n_rounds)
     carry = sim._init_carry()
     t0 = time.time()
-    lowered = sim._scan_fn(with_eval).lower(carry, keys)
+    lowered = sim._scan_fn(with_eval).lower(sim._dyn, carry, keys, ridx)
     lower_s = time.time() - t0
-    rows.append((f"sim_lower[U={u},C={c},rounds={n_rounds},{policy}]",
+    rows.append((f"sim_lower[{tag},rounds={n_rounds}]",
                  lower_s * 1e6, f"hlo_bytes={len(lowered.as_text())}"))
     if dry_run:
-        rows.append((f"sim_dryrun[U={u},C={c},rounds={n_rounds},{policy}]",
+        rows.append((f"sim_dryrun[{tag},rounds={n_rounds}]",
                      0.0, "lowered=ok"))
         return rows
 
     t0 = time.time()
     compiled = lowered.compile()
     compile_s = time.time() - t0
-    rows.append((f"sim_compile[U={u},C={c},rounds={n_rounds},{policy}]",
+    rows.append((f"sim_compile[{tag},rounds={n_rounds}]",
                  compile_s * 1e6, "one_compile"))
 
     t0 = time.time()
-    (flat, *_), out = compiled(carry, keys)
+    (flat, *_), out = compiled(sim._dyn, carry, keys, ridx)
     jax.block_until_ready(flat)
     run_s = time.time() - t0
     import numpy as np
@@ -104,16 +122,17 @@ def bench_fleet_scale(
     qs = np.asarray(out["q_levels"])
     mean_q = float(qs[qs > 0].mean()) if (qs > 0).any() else 0.0
     rows.append((
-        f"sim_fleet[U={u},C={c},rounds={n_rounds},{policy}]",
+        f"sim_fleet[{tag},rounds={n_rounds}]",
         run_s / n_rounds * 1e6,
         f"rounds_per_s={n_rounds / run_s:.3f};mean_sched={n_sched.mean():.1f}"
         f";mean_q={mean_q:.2f};energy_J={float(np.asarray(out['energy']).sum()):.5f}",
     ))
     if json_rows is not None:
         json_rows.append({
-            "name": f"sim_fleet[U={u},C={c},rounds={n_rounds},{policy}]",
+            "name": f"sim_fleet[{tag},rounds={n_rounds}]",
             "engine": "active-set-compaction",
             "u": u, "c": c, "rounds": n_rounds, "policy": policy_mode,
+            "scenario": scen,
             "aggregator": "pallas-tiled",
             "rounds_per_s": round(n_rounds / run_s, 5),
             "compile_s": round(compile_s, 3),
@@ -122,6 +141,86 @@ def bench_fleet_scale(
             "mean_sched": round(float(n_sched.mean()), 2),
             "mean_q": round(mean_q, 3),
         })
+    return rows
+
+
+def bench_baseline_energy(
+    u: int = 1024,
+    n_rounds: int = 20,
+    scenario: str = "single_bs",
+    policies: tuple = ("greedy", "no_quant", "channel_allocate", "principle"),
+    task: str = "tiny",
+    n_channels: int = 8,
+    mu: float = 100.0,
+    beta: float = 20.0,
+    batch_size: int = 8,
+    seed: int = 0,
+    target_acc: float | None = None,
+    ga_generations: int = 8,
+    ga_population: int = 12,
+    json_rows: list | None = None,
+) -> list[tuple]:
+    """QCCF vs the paper's baselines on ONE scenario, one compile per policy.
+
+    Every policy sees the same scenario pytree, seed, and per-round key
+    schedule, so channel draws / client drops / minibatches are identical —
+    the only difference is the decision function traced into the scan.
+    Records cumulative uplink+compute energy, final accuracy, and
+    rounds/energy-to-target-accuracy (target defaults to the worst final
+    accuracy across policies, i.e. a level every policy reaches — the
+    paper's "matched accuracy" comparison of Figs. 3/4).
+    """
+    import numpy as np
+    from repro.core.genetic import GAConfig
+    from repro.sim import build_sim
+
+    ga_config = GAConfig(generations=ga_generations, population=ga_population,
+                         repair_infeasible=True)
+    rows = []
+    results: dict = {}
+    for pol in policies:
+        assert pol in BENCH_POLICIES, pol
+        sim = build_sim(
+            task, scenario=scenario, n_clients=u, n_channels=n_channels,
+            mu=mu, beta=beta, seed=seed, batch_size=batch_size, n_test=256,
+            policy_mode=_POLICY_MODES.get(pol, pol), ga_config=ga_config,
+        )
+        t0 = time.time()
+        res = sim.run_compiled(n_rounds, with_eval=True)
+        run_s = time.time() - t0
+        results[pol] = (
+            np.asarray(res.energy, dtype=np.float64),
+            np.asarray(res.accuracy, dtype=np.float64),
+            run_s,
+        )
+
+    if target_acc is None:
+        target_acc = min(float(acc[-1]) for _, acc, _ in results.values())
+
+    for pol, (energy, acc, run_s) in results.items():
+        cum_e = np.cumsum(energy)
+        hit = np.nonzero(acc >= target_acc)[0]
+        r_hit = int(hit[0]) + 1 if hit.size else -1
+        e_hit = float(cum_e[hit[0]]) if hit.size else float(cum_e[-1])
+        rows.append((
+            f"sim_baseline[{scenario},{pol},U={u},rounds={n_rounds}]",
+            run_s / n_rounds * 1e6,
+            f"cum_energy_J={float(cum_e[-1]):.5f};final_acc={float(acc[-1]):.4f}"
+            f";target_acc={target_acc:.4f};rounds_to_target={r_hit}"
+            f";energy_to_target_J={e_hit:.5f}",
+        ))
+        if json_rows is not None:
+            json_rows.append({
+                "name": f"sim_baseline[{scenario},{pol},U={u},rounds={n_rounds}]",
+                "bench": "baseline_energy",
+                "scenario": scenario, "policy": pol,
+                "u": u, "c": n_channels, "rounds": n_rounds,
+                "cum_energy_J": round(float(cum_e[-1]), 6),
+                "final_acc": round(float(acc[-1]), 5),
+                "target_acc": round(float(target_acc), 5),
+                "rounds_to_target": r_hit,
+                "energy_to_target_J": round(e_hit, 6),
+            })
     return rows
 
 
@@ -177,8 +276,19 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--eval", action="store_true")
-    ap.add_argument("--policy", choices=["greedy", "ga"], default="greedy",
-                    help="ga = full Algorithm 1 (compiled GA) inside the scan")
+    ap.add_argument("--policy", choices=list(BENCH_POLICIES), default="greedy",
+                    help="ga = full Algorithm 1 (compiled GA) inside the scan;"
+                         " no_quant/channel_allocate/principle/same_size are"
+                         " the paper's baselines as traced decision functions")
+    ap.add_argument("--scenario", default=None,
+                    help="registered scenario preset (single_bs, cellfree_a4,"
+                         " noniid_a01); default = legacy single-BS build")
+    ap.add_argument("--baseline", action="store_true",
+                    help="run the QCCF-vs-baselines energy comparison on"
+                         " --scenario instead of the scaling bench")
+    ap.add_argument("--target-acc", type=float, default=None,
+                    help="matched-accuracy level for --baseline (default:"
+                         " worst final accuracy across policies)")
     ap.add_argument("--ga-generations", type=int, default=30)
     ap.add_argument("--ga-population", type=int, default=32)
     ap.add_argument("--json", action="store_true",
@@ -186,14 +296,26 @@ def main() -> None:
     args = ap.parse_args()
     print("name,us_per_call,derived", flush=True)
     json_rows: list | None = [] if args.json else None
-    rows = bench_fleet_scale(
-        u=args.clients, n_rounds=args.rounds, task=args.task,
-        n_channels=(None if args.channels == 0 else args.channels),
-        mu=args.mu, beta=args.beta, batch_size=args.batch_size,
-        seed=args.seed, dry_run=args.dry_run, with_eval=args.eval,
-        policy=args.policy, ga_generations=args.ga_generations,
-        ga_population=args.ga_population, json_rows=json_rows,
-    )
+    if args.baseline:
+        rows = bench_baseline_energy(
+            u=args.clients, n_rounds=args.rounds,
+            scenario=args.scenario or "single_bs", task=args.task,
+            n_channels=(args.clients if args.channels == 0 else args.channels),
+            mu=args.mu, beta=args.beta, batch_size=args.batch_size,
+            seed=args.seed, target_acc=args.target_acc,
+            ga_generations=args.ga_generations,
+            ga_population=args.ga_population, json_rows=json_rows,
+        )
+    else:
+        rows = bench_fleet_scale(
+            u=args.clients, n_rounds=args.rounds, task=args.task,
+            n_channels=(None if args.channels == 0 else args.channels),
+            mu=args.mu, beta=args.beta, batch_size=args.batch_size,
+            seed=args.seed, dry_run=args.dry_run, with_eval=args.eval,
+            policy=args.policy, scenario=args.scenario,
+            ga_generations=args.ga_generations,
+            ga_population=args.ga_population, json_rows=json_rows,
+        )
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
     if json_rows:

@@ -62,10 +62,20 @@ def data_term(
     w_round: np.ndarray,  # (U,) round weights a_i D_i / D^n (0 if out)
     g_sq: np.ndarray,     # (U,) gradient-norm-bound estimates squared
     sigma_sq: np.ndarray, # (U,) minibatch-variance estimates
+    hetero: np.ndarray | None = None,  # (U,) scheduling multiplier (>= 1)
 ) -> float:
-    """Per-round contribution to C6 (the eps1 constraint, eq. 20)."""
+    """Per-round contribution to C6 (the eps1 constraint, eq. 20).
+
+    ``hetero`` (when given) scales the *scheduling-exclusion* component
+    only: leaving out a client with multiplier m costs m times more, so a
+    Lyapunov controller schedules high-KL (label-skewed) clients more
+    eagerly. The drift components are per-round sampling noise and do not
+    depend on which clients were excluded, so they stay unscaled. ``None``
+    (or all-ones) restores the heterogeneity-blind eq. 20 exactly.
+    """
     tau = consts.tau
-    sched = 4.0 * tau * np.sum((1.0 - a * w_full) * g_sq)
+    g_sched = g_sq if hetero is None else g_sq * hetero
+    sched = 4.0 * tau * np.sum((1.0 - a * w_full) * g_sched)
     drift = consts.a1 * np.sum(w_round * g_sq) + consts.a2 * np.sum(w_round * sigma_sq)
     return float(sched + drift)
 

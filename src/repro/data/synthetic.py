@@ -81,6 +81,32 @@ def make_federated_datasets(
     return out
 
 
+def label_histograms(datasets: list[dict], n_classes: int) -> np.ndarray:
+    """(U, K) realized label distribution per client (normalized counts).
+
+    Computed from the labels actually drawn, not the Dirichlet parameters:
+    the scheduler should react to the data clients hold, and at small D_i
+    the realized skew deviates substantially from the sampling probs.
+    """
+    hist = np.zeros((len(datasets), n_classes))
+    for i, d in enumerate(datasets):
+        hist[i] = np.bincount(np.asarray(d["y"]), minlength=n_classes)
+    return hist / np.maximum(hist.sum(axis=1, keepdims=True), 1.0)
+
+
+def hetero_kl(datasets: list[dict], n_classes: int) -> np.ndarray:
+    """(U,) KL(client label histogram || global histogram) — the
+    heterogeneity score the scenario's ``hetero_weight`` scales into the
+    scheduling term (2308.03521-style non-IID-aware scheduling). 0 for a
+    client whose labels mirror the global mix; grows with label skew."""
+    p = label_histograms(datasets, n_classes)               # (U, K)
+    sizes = np.array([len(d["y"]) for d in datasets], np.float64)
+    g = (p * sizes[:, None]).sum(axis=0)
+    g = g / g.sum()                                          # (K,) global mix
+    ratio = np.where(p > 0, p / np.maximum(g, 1e-12), 1.0)
+    return np.sum(np.where(p > 0, p * np.log(ratio), 0.0), axis=1)
+
+
 def minibatches(data: dict, batch_size: int, rng: np.random.Generator):
     """Infinite shuffled minibatch iterator over a local dataset."""
     n = data["x"].shape[0]

@@ -191,8 +191,17 @@ class SameSizePolicy(Policy):
 
     name = "same_size_26"
 
-    def __init__(self, controller: QCCFController) -> None:
+    def __init__(self, controller) -> None:
+        # any controller with decide/commit/sysp works: the numpy GA
+        # (QCCFController) or the key-scheduled host oracle of the compiled
+        # search (repro.sim.search.HostGAPolicy)
         self.controller = controller
+
+    def set_round_key(self, key) -> None:
+        # forwarded so FleetSim.run_host_policy can drive a HostGAPolicy
+        # controller on the engine's per-round GA key schedule
+        if hasattr(self.controller, "set_round_key"):
+            self.controller.set_round_key(key)
 
     def decide(self, ctx: RoundContext) -> Decision:
         fake = dataclasses.replace(

@@ -37,6 +37,19 @@ TASKS = {
 }
 
 
+def task_data_sizes(task: str, mu: Optional[float] = None,
+                    beta: Optional[float] = None) -> tuple[float, float]:
+    """Resolve the D_i ~ N(mu, beta) spec for a task (shared by
+    ``build_experiment`` and ``repro.sim.build_sim`` — one clamp, one
+    place). ``None`` means the paper's Sec.-VI defaults; the tiny task
+    clamps both down so its 16x16 proxy stays a sub-second fixture."""
+    mu = 1200.0 if mu is None else mu
+    beta = 150.0 if beta is None else beta
+    if task == "tiny":
+        mu, beta = min(mu, 200.0), min(beta, 40.0)
+    return mu, beta
+
+
 def build_experiment(
     policy_name: str,
     task: str = "tiny",
@@ -52,8 +65,7 @@ def build_experiment(
     ga: Optional[GAConfig] = None,
 ) -> FLExperiment:
     task_spec, cnn_cfg, sysp = TASKS[task]
-    if task == "tiny":
-        mu, beta = min(mu, 200.0), min(beta, 40.0)
+    mu, beta = task_data_sizes(task, mu, beta)
     img_task = SyntheticImageTask(task_spec, seed=seed)
     sizes = gaussian_sizes(n_clients, mu, beta, seed=seed)
     datasets = make_federated_datasets(img_task, n_clients, sizes,

@@ -1,12 +1,17 @@
 """repro.sim — compiled fleet simulator for 1000+-client QCCF rounds.
 
-See README.md in this directory for the state layout, masking rules, and
-the fast-path-vs-GA-fallback policy split.
+See README.md in this directory for the scenario schema, the state layout,
+masking rules, and the policy dispatch (fast path / compiled GA / traced
+baselines).
 """
 from repro.sim.channel import SimChannel, drop_clients
 from repro.sim.engine import FleetSim, SimResult, build_sim
 from repro.sim.fleet import Fleet, build_fleet, ema_update, fleet_local_sgd
 from repro.sim.policy import FastDecision, HostFastPolicy, decide, decide_host, greedy_assign, greedy_assign_host, solve_kkt
+from repro.sim.scenario import (
+    ASSOCIATIONS, POLICIES, DataSpec, LyapunovSpec, Scenario, Topology,
+    get_scenario, register_scenario, scenario_names,
+)
 from repro.sim.search import HostGAPolicy, ga_decide, run_ga_host
 
 __all__ = [
@@ -15,5 +20,7 @@ __all__ = [
     "Fleet", "build_fleet", "ema_update", "fleet_local_sgd",
     "FastDecision", "HostFastPolicy", "decide", "decide_host", "greedy_assign",
     "greedy_assign_host", "solve_kkt",
+    "ASSOCIATIONS", "POLICIES", "DataSpec", "LyapunovSpec", "Scenario",
+    "Topology", "get_scenario", "register_scenario", "scenario_names",
     "HostGAPolicy", "ga_decide", "run_ga_host",
 ]

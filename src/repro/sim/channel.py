@@ -1,4 +1,5 @@
-"""``jax.random``-native port of :class:`repro.wireless.channel.ChannelModel`.
+"""``jax.random``-native port of :class:`repro.wireless.channel.ChannelModel`,
+generalized to an (A, U, C) cell-free multi-AP geometry.
 
 The numpy model draws per-round (U, C) Rician gains and Shannon rates on the
 host, which forces a device round-trip every round. This port evaluates the
@@ -7,8 +8,22 @@ log-distance path loss, ``v = B log2(1 + p h / (B N0))`` — as traced jnp ops
 on a PRNG key, so the whole experiment scan (``repro.sim.engine``) compiles
 rate draws into the round body.
 
-The static client drop (distances) stays host-side setup: pass either a
-numpy ``ChannelModel`` (to share its drop exactly, for parity runs) or a key.
+Cell-free generalization: distances are an ``(A, U)`` matrix (A access
+points), per-round fading is drawn per (AP, client, channel), and the
+scenario topology's ``association`` rule reduces the (A, U, C) per-AP gains
+to the effective (U, C) uplink — ``best`` serves each client from its
+strongest-large-scale AP, ``combine`` sums gain over all APs (non-coherent
+distributed MRC). **A = 1 reproduces the legacy single-BS draws bit for
+bit** under either rule: the fading tensor is the same PRNG stream reshaped
+to (1, U, C), selection picks AP 0 exactly, and a single-term sum is exact
+(regressed in tests/test_scenario.py).
+
+The static client drop stays host-side setup: the drop itself lives on the
+scenario's :meth:`repro.sim.scenario.Topology.drop`; pass a numpy
+``ChannelModel`` (to share its drop exactly, for parity runs) or a key.
+The per-round draw functions are pure in the distances so the engine can
+feed them as dynamic jit arguments (one compile across same-shape
+scenarios).
 """
 from __future__ import annotations
 
@@ -22,58 +37,143 @@ from repro.wireless.channel import ChannelModel, ChannelParams
 
 
 def drop_clients(key: jax.Array, params: ChannelParams) -> jax.Array:
-    """Uniform drop in a ``radius_m`` disc; (U,) distances, near-field floored."""
+    """Uniform drop in a ``radius_m`` disc; (U,) distances, near-field
+    floored at ``params.near_field_m`` (legacy single-BS drop — the
+    ``Topology(mode="single_bs")`` drop is this, reshaped to (1, U))."""
     u = jax.random.uniform(key, (params.n_clients,))
     r = params.radius_m * jnp.sqrt(u)
-    return jnp.maximum(r, 10.0)
+    return jnp.maximum(r, params.near_field_m)
 
+
+# ------------------------------------------------- pure per-round physics
+
+def path_loss_db(distances: jax.Array, params: ChannelParams) -> jax.Array:
+    """TR 38.901 UMa LOS fit, elementwise over any distances shape."""
+    return (
+        28.0
+        + 22.0 * jnp.log10(distances)
+        + 20.0 * jnp.log10(jnp.float32(params.carrier_ghz))
+    )
+
+
+def large_scale(distances: jax.Array, params: ChannelParams) -> jax.Array:
+    """Linear large-scale power gain (path loss + antenna gain), same shape
+    as ``distances`` — (A, U) in the cell-free layout."""
+    db = -path_loss_db(distances, params) + params.antenna_gain_db
+    return 10.0 ** (db / 10.0)
+
+
+def draw_ap_gains(key: jax.Array, params: ChannelParams,
+                  distances: jax.Array) -> jax.Array:
+    """(A, U, C) per-AP linear power gains h_{a,i,c} for one round.
+
+    The Rician normals are drawn as one (A, U, C) tensor, so at A = 1 the
+    PRNG stream is bit-identical to the legacy (U, C) draw (same key, same
+    element count, row-major counters).
+    """
+    p = params
+    a = distances.shape[0]
+    k, zeta = p.rician_k, p.rician_zeta
+    los = np.sqrt(k / (k + 1.0) * zeta)
+    nlos_std = np.sqrt(zeta / (2.0 * (k + 1.0)))
+    shape = (a, p.n_clients, p.n_channels)
+    kx, ky = jax.random.split(key)
+    x = los + nlos_std * jax.random.normal(kx, shape)
+    y = nlos_std * jax.random.normal(ky, shape)
+    small_scale = x**2 + y**2
+    return small_scale * large_scale(distances, params)[:, :, None]
+
+
+def effective_gains(ap_gains: jax.Array, distances: jax.Array,
+                    params: ChannelParams, association: str) -> jax.Array:
+    """(A, U, C) per-AP gains -> effective (U, C) uplink gains.
+
+    best    — cell selection on large-scale gain (distance): client i is
+              served only by ``argmax_a large_scale(d_{a,i})``;
+    combine — non-coherent power combining: gains sum over every AP.
+
+    Both are the identity at A = 1 (select the only AP / sum one term).
+    """
+    if association == "combine":
+        return jnp.sum(ap_gains, axis=0)
+    assert association == "best", association
+    ap_star = jnp.argmax(large_scale(distances, params), axis=0)   # (U,)
+    return jnp.take_along_axis(ap_gains, ap_star[None, :, None], axis=0)[0]
+
+
+def draw_rates(key: jax.Array, params: ChannelParams, distances: jax.Array,
+               association: str = "best") -> jax.Array:
+    """(U, C) achievable uplink rates [bit/s] for one round (eq. 14),
+    through the (A, U, C) draw + association reduction."""
+    gains = effective_gains(
+        draw_ap_gains(key, params, distances), distances, params, association
+    )
+    snr = params.p_tx * gains / params.noise_power
+    return params.bandwidth * jnp.log2(1.0 + snr)
+
+
+# ----------------------------------------------------------- frozen handle
 
 @dataclasses.dataclass(frozen=True)
 class SimChannel:
-    """Frozen channel geometry + params; per-round draws are pure functions."""
+    """Frozen channel geometry + params; per-round draws are pure functions.
+
+    ``distances`` is the (A, U) client→AP matrix; the legacy single-BS
+    layout is the A = 1 degenerate case. ``association`` only matters for
+    A > 1 (both rules coincide at A = 1).
+    """
 
     params: ChannelParams
-    distances: jax.Array  # (U,) static client drop
+    distances: jax.Array       # (A, U) static client drop
+    association: str = "best"
+
+    def __post_init__(self) -> None:
+        assert self.distances.ndim == 2, (
+            "distances must be (A, U); legacy (U,) callers should build via "
+            "from_key/from_host_model which reshape"
+        )
 
     @classmethod
     def from_key(cls, key: jax.Array, params: ChannelParams) -> "SimChannel":
-        return cls(params=params, distances=drop_clients(key, params))
+        """Legacy single-BS drop from a key (A = 1)."""
+        return cls(params=params, distances=drop_clients(key, params)[None, :])
+
+    @classmethod
+    def from_topology(cls, key: jax.Array, params: ChannelParams,
+                      topology) -> "SimChannel":
+        """Drop via the scenario topology (``repro.sim.scenario.Topology``)."""
+        return cls(params=params, distances=topology.drop(key, params),
+                   association=topology.association)
 
     @classmethod
     def from_host_model(cls, model: ChannelModel) -> "SimChannel":
-        """Share the numpy model's client drop (exact same large-scale fading)."""
+        """Share the numpy model's client drop (exact same large-scale
+        fading); the numpy model is single-BS, so A = 1."""
         return cls(params=model.params,
-                   distances=jnp.asarray(model.distances, jnp.float32))
+                   distances=jnp.asarray(model.distances, jnp.float32)[None, :])
+
+    @property
+    def n_aps(self) -> int:
+        return int(self.distances.shape[0])
 
     def path_loss_db(self) -> jax.Array:
-        p = self.params
-        return (
-            28.0
-            + 22.0 * jnp.log10(self.distances)
-            + 20.0 * jnp.log10(jnp.float32(p.carrier_ghz))
-        )
+        return path_loss_db(self.distances, self.params)
 
     def large_scale(self) -> jax.Array:
-        """(U,) linear large-scale power gain (path loss + antenna gain)."""
-        db = -self.path_loss_db() + self.params.antenna_gain_db
-        return 10.0 ** (db / 10.0)
+        """(A, U) linear large-scale power gain (path loss + antenna gain)."""
+        return large_scale(self.distances, self.params)
+
+    def draw_ap_gains(self, key: jax.Array) -> jax.Array:
+        """(A, U, C) per-AP linear power gains for one round (traceable)."""
+        return draw_ap_gains(key, self.params, self.distances)
 
     def draw_gains(self, key: jax.Array) -> jax.Array:
-        """(U, C) linear power gains h_{i,c} for one round (traceable)."""
-        p = self.params
-        k, zeta = p.rician_k, p.rician_zeta
-        los = np.sqrt(k / (k + 1.0) * zeta)
-        nlos_std = np.sqrt(zeta / (2.0 * (k + 1.0)))
-        shape = (p.n_clients, p.n_channels)
-        kx, ky = jax.random.split(key)
-        x = los + nlos_std * jax.random.normal(kx, shape)
-        y = nlos_std * jax.random.normal(ky, shape)
-        small_scale = x**2 + y**2
-        return small_scale * self.large_scale()[:, None]
+        """(U, C) effective linear power gains h_{i,c} for one round."""
+        return effective_gains(
+            self.draw_ap_gains(key), self.distances, self.params,
+            self.association,
+        )
 
     def draw_rates(self, key: jax.Array) -> jax.Array:
         """(U, C) achievable uplink rates [bit/s] for one round (eq. 14)."""
-        p = self.params
-        gains = self.draw_gains(key)
-        snr = p.p_tx * gains / p.noise_power
-        return p.bandwidth * jnp.log2(1.0 + snr)
+        return draw_rates(key, self.params, self.distances, self.association)

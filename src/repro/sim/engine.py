@@ -5,8 +5,14 @@ synthetic datasets, same client drop, same eps1/eps2 calibration, same
 initial model for a given seed), then ``FleetSim.run_compiled`` executes
 every round inside a single jitted ``lax.scan``:
 
-  decision   — compiled greedy + vectorized KKT (``repro.sim.policy``)
-  channel    — traced Rician/UMa rate draws (``repro.sim.channel``)
+  decision   — compiled greedy + vectorized KKT (``repro.sim.policy``), the
+               in-trace GA (``repro.sim.search``), or one of the paper's
+               baselines as a traced decision function — selected by the
+               scenario pytree's ``policy`` field (``repro.sim.scenario``)
+  channel    — traced Rician/UMa rate draws (``repro.sim.channel``), (A, U)
+               cell-free geometry with the distances as a dynamic jit
+               argument (scenarios sharing a pytree structure share one
+               compiled scan)
   compaction — ``jnp.take`` the S = min(U, C) scheduled clients' rows onto
                the fixed slot axis (``FastDecision.slots``); everything
                below is O(S), not O(U)
@@ -40,10 +46,14 @@ import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from repro.core.genetic import GAConfig, RoundContext, SystemParams
-from repro.data.synthetic import SyntheticImageTask, gaussian_sizes, make_federated_datasets, make_test_set
+from repro.data.synthetic import (
+    SyntheticImageTask, gaussian_sizes, hetero_kl, make_federated_datasets,
+    make_test_set,
+)
 from repro.fl.trainer import ExperimentResult, RoundRecord
 from repro.kernels import stochastic_quant as sq
 from repro.models import cnn
+from repro.sim import channel as sim_channel
 from repro.sim import policy as fast_policy
 from repro.sim import search
 from repro.sim.channel import SimChannel
@@ -51,10 +61,23 @@ from repro.sim.fleet import (
     Fleet, build_fleet, ema_update, fleet_local_sgd, gather_active,
     scatter_slots,
 )
+from repro.sim.scenario import Scenario, get_scenario
 from repro.wireless.channel import ChannelModel, ChannelParams
 
 Pytree = Any
 LANES = sq.LANES
+
+# fold_in tag deriving the cell-free client-drop key from the seed (kept
+# away from the model-init / round-key streams).
+DROP_KEY_TAG = 7
+# fold_in tag for the eps-probe rate draw when no host ChannelModel exists
+# (cell-free topologies; single-BS setups probe the numpy model instead).
+PROBE_KEY_TAG = 8
+
+# scenario-pytree policy names -> engine modes (the engine keeps its
+# historical mode names; scenarios speak the POLICIES vocabulary)
+POLICY_MODE_ALIASES = {"qccf": "greedy", "qccf_ga": "compiled-ga"}
+_BASELINE_MODES = ("no_quant", "channel_allocate", "principle", "same_size")
 
 
 @dataclasses.dataclass
@@ -153,8 +176,10 @@ class FleetSim:
         block_m: int = 64,
         seed: int = 0,
         host_channel: Optional[ChannelModel] = None,
-        policy_mode: str = "greedy",  # "greedy" | "host-ga" | "compiled-ga"
+        policy_mode: str = "greedy",  # engine mode or scenario policy name
         ga_config: Optional[GAConfig] = None,
+        hetero: Optional[np.ndarray] = None,  # (U,) scheduling multiplier
+        scenario: Optional[Scenario] = None,
         name: str = "sim_qccf",
     ) -> None:
         flat0, unravel = ravel_pytree(init_params)
@@ -175,8 +200,26 @@ class FleetSim:
         self._zpad = _pad_len(self.z, self.block_m)
         self.seed = int(seed)
         self.host_channel = host_channel
-        assert policy_mode in ("greedy", "host-ga", "compiled-ga"), policy_mode
+        policy_mode = POLICY_MODE_ALIASES.get(policy_mode, policy_mode)
+        assert policy_mode in (
+            ("greedy", "host-ga", "compiled-ga") + _BASELINE_MODES
+        ), policy_mode
         self.policy_mode = policy_mode
+        self.hetero = None if hetero is None else np.asarray(hetero, np.float64)
+        self.scenario = scenario
+        # Dynamic jit-argument leaves of the scenario: everything continuous
+        # a sweep varies (AP geometry -> distances, the heterogeneity
+        # multiplier, the eps budgets) enters the compiled scan as an
+        # argument, NOT a closed-over constant — scenarios sharing a pytree
+        # structure (same shapes / policy / association) share ONE compiled
+        # scan, gated zero-retrace in tests/test_scenario.py.
+        u = fleet.n_clients
+        self._dyn = {
+            "distances": jnp.asarray(channel.distances, jnp.float32),
+            "hetero": (jnp.ones((u,), jnp.float32) if hetero is None
+                       else jnp.asarray(hetero, jnp.float32)),
+            "eps": jnp.array([self.eps1, self.eps2], jnp.float32),
+        }
         # Engine default: repair (drop infeasible clients), the same
         # semantics as the greedy fast path's feasibility gate; pass an
         # explicit GAConfig for the paper's fitness-0 rule.
@@ -207,16 +250,21 @@ class FleetSim:
         )
         return out.reshape(-1)
 
-    def _round_body(self, carry, key, with_eval: bool):
+    def _round_body(self, dyn, carry, xs, with_eval: bool):
         flat, g_sq, sigma_sq, theta_max, lam1, lam2 = carry
+        key, ridx = xs
         k_ch, k_batch, k_quant = jax.random.split(key, 3)
         sysp, z = self.sysp, self.z
 
-        rates = self.channel.draw_rates(k_ch)
+        rates = sim_channel.draw_rates(
+            k_ch, self.channel.params, dyn["distances"],
+            self.channel.association,
+        )
         g_n = g_sq / jnp.maximum(jnp.mean(g_sq), 1e-12)
         s_n = sigma_sq / jnp.maximum(jnp.mean(sigma_sq), 1e-12)
         d_sizes = self.fleet.n_samples.astype(jnp.float32)
-        if self.policy_mode == "compiled-ga":
+        mode = self.policy_mode
+        if mode == "compiled-ga":
             # Full Algorithm 1 inside the trace: GA over channel assignments
             # with the KKT fitness. The GA key derives from the ROUND key
             # (not k_ch) so greedy-mode streams stay byte-identical to the
@@ -225,11 +273,33 @@ class FleetSim:
             dec = search.ga_decide(
                 k_ga, rates, d_sizes, g_n, s_n, theta_max, lam1, lam2, sysp,
                 z, self.v_weight, cfg=self.ga_config, q_cap=self.q_cap,
+                hetero=dyn["hetero"],
+            )
+        elif mode == "same_size":
+            # SameSize [26] runs the same GA machinery on a mean-size fake
+            # context; same GA key derivation as compiled-ga.
+            k_ga = jax.random.fold_in(key, search.GA_KEY_TAG)
+            dec = search.baseline_same_size(
+                k_ga, rates, d_sizes, g_n, s_n, theta_max, lam1, lam2, sysp,
+                z, self.v_weight, cfg=self.ga_config, q_cap=self.q_cap,
+            )
+        elif mode == "no_quant":
+            dec = fast_policy.baseline_no_quant(
+                rates, d_sizes, g_n, s_n, theta_max, sysp, z, self.q_cap,
+            )
+        elif mode == "channel_allocate":
+            dec = fast_policy.baseline_channel_allocate(
+                rates, d_sizes, g_n, s_n, theta_max, sysp, z, self.q_cap,
+            )
+        elif mode == "principle":
+            dec = fast_policy.baseline_principle(
+                ridx, rates, d_sizes, g_n, s_n, theta_max, sysp, z,
+                self.q_cap,
             )
         else:
             dec = fast_policy.decide(
                 rates, d_sizes, g_n, s_n, theta_max, lam2, sysp, z,
-                self.v_weight, q_cap=self.q_cap,
+                self.v_weight, q_cap=self.q_cap, hetero=dyn["hetero"],
             )
         # ---- active-set compaction: O(U) work ends with the decision.
         # Everything below lives on the fixed S = min(U, C) slot axis.
@@ -261,8 +331,8 @@ class FleetSim:
                               dec.a, floor=1e-8)
         theta_max = jnp.where(dec.a > 0, scatter_slots(slots, theta, u),
                               theta_max)
-        lam1 = jnp.maximum(lam1 + dec.data_term - self.eps1, 0.0)
-        lam2 = jnp.maximum(lam2 + dec.quant_term - self.eps2, 0.0)
+        lam1 = jnp.maximum(lam1 + dec.data_term - dyn["eps"][0], 0.0)
+        lam2 = jnp.maximum(lam2 + dec.quant_term - dyn["eps"][1], 0.0)
 
         if with_eval:
             acc, loss = self.eval_fn(new_flat)
@@ -295,29 +365,44 @@ class FleetSim:
             jnp.float32(0.0),
         )
 
+    def _scan_xs(self, n_rounds: int):
+        """The scan's per-round inputs: (round keys, round indices). The
+        round index feeds round-scheduled policies (``principle``)."""
+        keys = jax.random.split(jax.random.PRNGKey(self.seed + 1), n_rounds)
+        return keys, jnp.arange(n_rounds, dtype=jnp.int32)
+
     def _scan_fn(self, with_eval: bool):
-        def run(carry, keys):
-            body = functools.partial(self._round_body, with_eval=with_eval)
-            return jax.lax.scan(body, carry, keys)
+        """jit(run(dyn, carry, keys, ridx)) — the scenario's dynamic leaves
+        (``_dyn``: distances/hetero/eps) are jit ARGUMENTS, so re-running
+        with a structurally identical scenario's leaves hits the cache
+        (zero retrace)."""
+
+        def run(dyn, carry, keys, ridx):
+            def body(c, xs):
+                return self._round_body(dyn, c, xs, with_eval)
+
+            return jax.lax.scan(body, carry, (keys, ridx))
 
         return jax.jit(run)
 
     def lower(self, n_rounds: int, with_eval: bool = False):
         """Trace + lower the full n_rounds scan without executing (dry run)."""
-        keys = jax.random.split(jax.random.PRNGKey(self.seed + 1), n_rounds)
-        return self._scan_fn(with_eval).lower(self._init_carry(), keys)
+        keys, ridx = self._scan_xs(n_rounds)
+        return self._scan_fn(with_eval).lower(
+            self._dyn, self._init_carry(), keys, ridx
+        )
 
     def run_compiled(self, n_rounds: int, with_eval: bool = True) -> SimResult:
         """The one-scan path: every round traced into one jitted scan
-        (policy modes "greedy" and "compiled-ga")."""
+        (every policy mode except "host-ga")."""
         assert self.policy_mode != "host-ga", (
             "host-ga decides on the host per round; use run() / run_host_policy"
         )
         fn = self._compiled.get(with_eval)
         if fn is None:
             fn = self._compiled[with_eval] = self._scan_fn(with_eval)
-        keys = jax.random.split(jax.random.PRNGKey(self.seed + 1), n_rounds)
-        (flat, *_rest), out = fn(self._init_carry(), keys)
+        keys, ridx = self._scan_xs(n_rounds)
+        (flat, *_rest), out = fn(self._dyn, self._init_carry(), keys, ridx)
         self.final_flat = flat
         return SimResult(
             name=self.name,
@@ -338,8 +423,31 @@ class FleetSim:
         ``ga_config`` — the oracle that replays a compiled-GA scan."""
         return search.HostGAPolicy(
             self.sysp, self.eps1, self.eps2, self.v_weight,
-            cfg=self.ga_config, q_cap=self.q_cap,
+            cfg=self.ga_config, q_cap=self.q_cap, hetero=self.hetero,
         )
+
+    def make_host_policy(self):
+        """The host-side Policy mirroring this sim's compiled controller on
+        the shared key schedule — the oracle ``run_host_policy`` replays in
+        the per-policy parity suites (tests/test_sim_baselines.py)."""
+        from repro.fl import baselines as fl_baselines
+
+        mode = self.policy_mode
+        if mode == "greedy":
+            return fast_policy.HostFastPolicy(
+                self.sysp, self.eps1, self.eps2, self.v_weight,
+                q_cap=self.q_cap, hetero=self.hetero,
+            )
+        if mode in ("compiled-ga", "host-ga"):
+            return self.make_host_ga_policy()
+        if mode == "no_quant":
+            return fl_baselines.NoQuantPolicy(self.sysp)
+        if mode == "channel_allocate":
+            return fl_baselines.ChannelAllocatePolicy(self.sysp)
+        if mode == "principle":
+            return fl_baselines.PrinciplePolicy(self.sysp)
+        assert mode == "same_size", mode
+        return fl_baselines.SameSizePolicy(self.make_host_ga_policy())
 
     def run(self, n_rounds: int, with_eval: bool = True) -> ExperimentResult:
         """Mode dispatch: one-scan for greedy/compiled-ga, the per-round
@@ -524,33 +632,67 @@ class FleetSim:
 def build_sim(
     task: str = "tiny",
     *,
+    scenario: "Optional[Scenario | str]" = None,
     n_clients: int = 64,
     n_channels: Optional[int] = None,
-    mu: float = 1200.0,
-    beta: float = 150.0,
-    v_weight: float = 100.0,
-    alpha_dirichlet: float = 0.5,
+    mu: Optional[float] = None,
+    beta: Optional[float] = None,
+    v_weight: Optional[float] = None,
+    alpha_dirichlet: Optional[float] = None,
     lr: float = 0.05,
     seed: int = 0,
     batch_size: int = 32,
     q_cap: int = 8,
     block_m: int = 64,
     n_test: int = 1024,
-    target_q: float = 6.0,
-    policy_mode: str = "greedy",
+    target_q: Optional[float] = None,
+    policy_mode: Optional[str] = None,
     ga_config: Optional[GAConfig] = None,
+    hetero_weight: Optional[float] = None,
+    name: Optional[str] = None,
 ) -> FleetSim:
     """Mirror of ``repro.fl.experiment.build_experiment`` for the compiled
     engine: same task specs, same dataset/draw seeds, same client drop, and
     eps1/eps2 from the same ``auto_epsilons`` probe, so small-scale runs are
     directly comparable with the object-based ``FLExperiment``.
+
+    ``scenario`` selects a whole experiment configuration as data — a
+    :class:`repro.sim.scenario.Scenario` or a registered preset name
+    (``single_bs``/``cellfree_a4``/``noniid_a01``); explicit kwargs still
+    override individual scenario fields. A preset name is sized by
+    ``n_clients``/``n_channels``; a Scenario instance carries its own fleet
+    shape. ``scenario=None`` (or any ``mode="single_bs"`` topology) keeps
+    the legacy numpy ``ChannelModel`` client drop and eps probe, so those
+    paths are bit-for-bit the pre-scenario engine; cell-free topologies
+    drop via the topology's jax path and probe through the jnp channel.
     """
     from repro.core.controller import auto_epsilons
-    from repro.fl.experiment import TASKS
+    from repro.fl.experiment import TASKS, task_data_sizes
+
+    n_channels = n_clients if n_channels is None else n_channels
+    if isinstance(scenario, str):
+        scenario = get_scenario(scenario, n_clients=n_clients,
+                                n_channels=n_channels)
+    if scenario is not None:
+        n_clients = scenario.channel.n_clients
+        n_channels = scenario.channel.n_channels
+        mu = scenario.data.mu if mu is None else mu
+        beta = scenario.data.beta if beta is None else beta
+        if alpha_dirichlet is None:
+            alpha_dirichlet = scenario.data.alpha_dirichlet
+        v_weight = scenario.lyapunov.v_weight if v_weight is None else v_weight
+        target_q = scenario.lyapunov.target_q if target_q is None else target_q
+        policy_mode = scenario.policy if policy_mode is None else policy_mode
+        if hetero_weight is None:
+            hetero_weight = scenario.lyapunov.hetero_weight
+    v_weight = 100.0 if v_weight is None else float(v_weight)
+    alpha_dirichlet = 0.5 if alpha_dirichlet is None else float(alpha_dirichlet)
+    target_q = 6.0 if target_q is None else float(target_q)
+    policy_mode = "greedy" if policy_mode is None else policy_mode
+    hetero_weight = 0.0 if hetero_weight is None else float(hetero_weight)
 
     task_spec, cnn_cfg, sysp = TASKS[task]
-    if task == "tiny":
-        mu, beta = min(mu, 200.0), min(beta, 40.0)
+    mu, beta = task_data_sizes(task, mu, beta)
     img_task = SyntheticImageTask(task_spec, seed=seed)
     sizes = gaussian_sizes(n_clients, mu, beta, seed=seed)
     datasets = make_federated_datasets(img_task, n_clients, sizes,
@@ -567,24 +709,47 @@ def build_sim(
     def eval_fn(flat):
         return cnn.eval_metrics(cnn_cfg, unravel(flat), test_x, test_y)
 
-    n_channels = n_clients if n_channels is None else n_channels
-    host_channel = ChannelModel(
-        ChannelParams(n_clients=n_clients, n_channels=n_channels), seed=seed
+    ch_params = scenario.channel if scenario is not None else ChannelParams(
+        n_clients=n_clients, n_channels=n_channels
     )
-    channel = SimChannel.from_host_model(host_channel)
+    if scenario is None or scenario.topology.mode == "single_bs":
+        # legacy path: numpy drop + numpy probe — bit-for-bit the
+        # pre-scenario engine (golden-regressed in tests/test_scenario.py)
+        host_channel = ChannelModel(ch_params, seed=seed)
+        channel = SimChannel.from_host_model(host_channel)
+        if scenario is not None:
+            channel = dataclasses.replace(
+                channel, association=scenario.topology.association
+            )
+        probe_rates = host_channel.draw_rates()
+    else:
+        host_channel = None
+        drop_key = jax.random.fold_in(jax.random.PRNGKey(seed), DROP_KEY_TAG)
+        channel = SimChannel.from_topology(drop_key, ch_params,
+                                           scenario.topology)
+        probe_key = jax.random.fold_in(jax.random.PRNGKey(seed), PROBE_KEY_TAG)
+        probe_rates = np.asarray(channel.draw_rates(probe_key), np.float64)
 
     z = int(_flat0.shape[0])
     probe = RoundContext(
-        rates=host_channel.draw_rates(), d_sizes=sizes.astype(np.float64),
+        rates=probe_rates, d_sizes=sizes.astype(np.float64),
         g_sq=np.full(n_clients, 1.0), sigma_sq=np.full(n_clients, 1.0),
         theta_max=np.full(n_clients, 1.0), z=z,
     )
     eps1, eps2 = auto_epsilons(probe, sysp, target_q=target_q)
 
+    hetero = None
+    if hetero_weight > 0.0:
+        hetero = 1.0 + hetero_weight * hetero_kl(datasets, task_spec.n_classes)
+
+    if name is None:
+        name = (f"sim_{scenario.name}_{policy_mode}" if scenario is not None
+                else "sim_qccf")
     return FleetSim(
         fleet, params, loss_fn, eval_fn, channel, sysp,
         eps1=eps1, eps2=eps2, v_weight=v_weight, lr=lr,
         batch_size=batch_size, q_cap=q_cap,
         block_m=block_m, seed=seed, host_channel=host_channel,
         policy_mode=policy_mode, ga_config=ga_config,
+        hetero=hetero, scenario=scenario, name=name,
     )

@@ -308,9 +308,18 @@ def solve_kkt(
 
 # --------------------------------------------------------- bound terms
 
-def data_term(consts: bounds.BoundConstants, a, w_full, w_round, g_sq, sigma_sq):
-    """jnp port of :func:`repro.core.bounds.data_term` (eq. 20)."""
-    sched = 4.0 * consts.tau * jnp.sum((1.0 - a * w_full) * g_sq)
+def data_term(consts: bounds.BoundConstants, a, w_full, w_round, g_sq, sigma_sq,
+              hetero=None):
+    """jnp port of :func:`repro.core.bounds.data_term` (eq. 20).
+
+    ``hetero`` is the (U,) heterogeneity scheduling multiplier (>= 1, from
+    the scenario's ``hetero_weight`` x per-client label-KL): it scales only
+    the scheduling-exclusion component, making label-skewed clients more
+    expensive to leave out. ``None`` or all-ones is the heterogeneity-blind
+    eq. 20 bit for bit (IEEE multiply by 1.0 is exact).
+    """
+    g_sched = g_sq if hetero is None else g_sq * hetero
+    sched = 4.0 * consts.tau * jnp.sum((1.0 - a * w_full) * g_sched)
     drift = consts.a1 * jnp.sum(w_round * g_sq) + consts.a2 * jnp.sum(w_round * sigma_sq)
     return sched + drift
 
@@ -345,6 +354,7 @@ def finish_decision(
     z: int,
     v_weight: float,
     q_cap: int = 8,
+    hetero=None,       # (U,) scheduling multiplier (None = hetero-blind)
 ) -> FastDecision:
     """Steps 2-3 of the fast path for ANY channel assignment: infeasibility
     drop + vectorized KKT + bound terms. Shared by the greedy :func:`decide`
@@ -387,7 +397,7 @@ def finish_decision(
     latency = jnp.where(a, t_cmp + t_com, 0.0)
 
     consts = sysp.bound_constants()
-    dt = data_term(consts, af, w_full, w_round, g_sq, sigma_sq)
+    dt = data_term(consts, af, w_full, w_round, g_sq, sigma_sq, hetero)
     qt = quant_term(consts, w_round, z, theta_max, jnp.maximum(q, 1))
     payload = jnp.sum(jnp.where(a, z * q.astype(jnp.float32) + z + RANGE_BITS, 0.0))
     # drop the -1-marked channels of clients that failed the feasibility gate
@@ -413,13 +423,14 @@ def decide(
     z: int,
     v_weight: float,
     q_cap: int = 8,
+    hetero=None,
 ) -> FastDecision:
     """One fully traced decision round (steps 1-2 of the fast path)."""
     assign = greedy_assign(rates)
     v_assigned, a0 = participation_from_assign(assign, rates)
     return finish_decision(
         assign, v_assigned, a0, d_sizes, g_sq, sigma_sq, theta_max, lam2,
-        sysp, z, v_weight, q_cap=q_cap,
+        sysp, z, v_weight, q_cap=q_cap, hetero=hetero,
     )
 
 
@@ -436,11 +447,12 @@ class HostFastPolicy:
     name = "greedy_kkt"
 
     def __init__(self, sysp: SystemParams, eps1: float, eps2: float,
-                 v_weight: float, q_cap: int = 8) -> None:
+                 v_weight: float, q_cap: int = 8, hetero=None) -> None:
         self.sysp = sysp
         self.eps1, self.eps2 = float(eps1), float(eps2)
         self.v_weight = float(v_weight)
         self.q_cap = int(q_cap)
+        self.hetero = None if hetero is None else np.asarray(hetero, np.float64)
         self.lambda1 = 0.0
         self.lambda2 = 0.0
 
@@ -450,6 +462,7 @@ class HostFastPolicy:
         fd = decide_host(
             ctx.rates, ctx.d_sizes, ctx.g_sq, ctx.sigma_sq, ctx.theta_max,
             self.lambda2, self.sysp, ctx.z, self.v_weight, q_cap=self.q_cap,
+            hetero=self.hetero,
         )
         return Decision(
             assign=fd.assign, a=fd.a, q=fd.q, f=fd.f, energy=fd.energy,
@@ -474,6 +487,7 @@ def finish_host(
     z: int,
     v_weight: float,
     q_cap: int = 8,
+    hetero: np.ndarray | None = None,
 ) -> FastDecision:
     """Numpy mirror of :func:`finish_decision` for ANY assignment: the
     per-client solve goes through the trusted scalar ``repro.core.kkt``.
@@ -520,7 +534,7 @@ def finish_host(
 
     consts = sysp.bound_constants()
     af = a.astype(np.float64)
-    dt = bounds.data_term(consts, af, w_full, w_round, g_sq, sigma_sq)
+    dt = bounds.data_term(consts, af, w_full, w_round, g_sq, sigma_sq, hetero)
     qt = bounds.quant_term(consts, w_round, z, theta_max, np.maximum(q, 1))
     payload = float(np.sum(np.where(a, z * q + z + RANGE_BITS, 0.0)))
     assign_kept = np.where((assign >= 0) & a[np.clip(assign, 0, u - 1)], assign, -1)
@@ -543,9 +557,153 @@ def decide_host(
     z: int,
     v_weight: float,
     q_cap: int = 8,
+    hetero: np.ndarray | None = None,
 ) -> FastDecision:
     """Numpy oracle for :func:`decide`: greedy assignment + scalar KKT."""
     return finish_host(
         greedy_assign_host(rates), rates, d_sizes, g_sq, sigma_sq, theta_max,
-        lam2, sysp, z, v_weight, q_cap=q_cap,
+        lam2, sysp, z, v_weight, q_cap=q_cap, hetero=hetero,
     )
+
+
+# ----------------------------------------------------- compiled baselines
+#
+# The paper's Sec.-VI baselines (repro.fl.baselines) as traced decision
+# functions, selected by the scenario pytree's ``policy`` field so
+# QCCF-vs-baseline curves run inside the engine's one-compile scan at any
+# fleet size. Accounting mirrors ``fl.baselines._energies`` +
+# ``FleetSim.run_host_policy``'s wire clamp exactly (bit-for-bit parity at
+# U = 8 is regressed in tests/test_sim_baselines.py):
+#
+#   * energy/latency/bound terms are computed at the policy's RAW q (e.g.
+#     q = 32 for NoQuant) on the pre-timeout participation — timed-out
+#     clients still burn their energy, the "principle" pathology;
+#   * the ``q`` field / slots / payload are clamped into the wire format
+#     (``q_cap``), matching what run_host_policy executes and records;
+#   * baselines are heterogeneity-BLIND: no ``hetero`` argument, like
+#     their host counterparts.
+#
+# ``same_size`` needs the GA and therefore lives in ``repro.sim.search``
+# (importing it here would be circular).
+
+def account_baseline(
+    assign: jax.Array,     # (C,) channel -> client (-1 unused)
+    rates: jax.Array,      # (U, C)
+    d_sizes: jax.Array,
+    g_sq: jax.Array,
+    sigma_sq: jax.Array,
+    theta_max: jax.Array,
+    q_raw: jax.Array,      # (U,) the policy's chosen levels, float, unclamped
+    f: jax.Array,          # (U,) chosen CPU frequency
+    sysp: SystemParams,
+    z: int,
+    q_cap: int,
+    drop_late: bool = False,
+    late_tol: float = 1.0,   # drop when latency > t_max * late_tol
+) -> FastDecision:
+    """Traced mirror of ``fl.baselines._energies`` (+ the optional
+    latency-timeout drop of PrinciplePolicy/SameSizePolicy) packaged as a
+    FastDecision the engine's compacted round body can execute."""
+    u = d_sizes.shape[0]
+    v_assigned, a0 = participation_from_assign(assign, rates)
+    af0 = a0.astype(jnp.float32)
+    v_safe = jnp.maximum(v_assigned, 1e-6)
+
+    bits = z * q_raw + z + RANGE_BITS
+    t_com = bits / v_safe
+    t_cmp = sysp.tau_e * sysp.gamma * d_sizes / jnp.maximum(f, 1.0)
+    energy = jnp.where(
+        a0,
+        sysp.tau_e * sysp.alpha * sysp.gamma * d_sizes * f**2
+        + sysp.p_tx * t_com,
+        0.0,
+    )
+    latency = jnp.where(a0, t_cmp + t_com, 0.0)
+
+    d_n = jnp.sum(af0 * d_sizes)
+    w_round = jnp.where(a0, af0 * d_sizes / jnp.maximum(d_n, 1e-12), 0.0)
+    w_full = d_sizes / jnp.sum(d_sizes)
+    consts = sysp.bound_constants()
+    dt = data_term(consts, af0, w_full, w_round, g_sq, sigma_sq)
+    qt = quant_term(consts, w_round, z, theta_max, jnp.maximum(q_raw, 1.0))
+
+    # PrinciplePolicy semantics: clients past the deadline drop out of the
+    # aggregation (a = 0) AFTER the terms above were accounted — their
+    # energy stays spent and their latency stays on the record.
+    a = a0 & ~(latency > sysp.t_max * late_tol) if drop_late else a0
+
+    # Wire clamp, as run_host_policy applies to host decisions: the index
+    # plane is sized for q_cap levels, so records/slots carry clipped q.
+    q_wire = jnp.clip(q_raw.astype(jnp.int32), 1, q_cap) * a.astype(jnp.int32)
+    payload = jnp.sum(jnp.where(
+        a, z * jnp.maximum(q_wire, 1).astype(jnp.float32) + z + RANGE_BITS, 0.0
+    ))
+    assign_kept = jnp.where(
+        (assign >= 0) & a[jnp.clip(assign, 0, u - 1)], assign, -1
+    )
+    # run_host_policy records latency 0 when nothing was scheduled at all
+    latency = jnp.where(jnp.any(a), latency, 0.0)
+    return FastDecision(
+        assign=assign_kept, slots=compact_slots(assign_kept, u),
+        a=a.astype(jnp.int32), q=q_wire, f=jnp.where(a0, f, 0.0),
+        v_assigned=jnp.where(a0, v_assigned, 0.0), energy=energy,
+        latency=latency, data_term=dt, quant_term=qt, payload_bits=payload,
+    )
+
+
+def baseline_no_quant(
+    rates, d_sizes, g_sq, sigma_sq, theta_max, sysp: SystemParams, z: int,
+    q_cap: int,
+) -> FastDecision:
+    """Traced ``fl.baselines.NoQuantPolicy``: fp32 uploads (q = 32),
+    f = f_max to race the deadline."""
+    u = d_sizes.shape[0]
+    assign = greedy_assign(rates)
+    q = jnp.full((u,), 32.0)
+    f = jnp.full((u,), sysp.f_max)
+    return account_baseline(assign, rates, d_sizes, g_sq, sigma_sq,
+                            theta_max, q, f, sysp, z, q_cap)
+
+
+def baseline_channel_allocate(
+    rates, d_sizes, g_sq, sigma_sq, theta_max, sysp: SystemParams, z: int,
+    q_cap: int, q_policy_cap: int = 16,
+) -> FastDecision:
+    """Traced ``fl.baselines.ChannelAllocatePolicy``: greedy channels, the
+    largest q that fits T_max at f_max, then f relaxed to the latency
+    boundary — channel-adaptive, training-oblivious."""
+    u = d_sizes.shape[0]
+    sp = sysp
+    assign = greedy_assign(rates)
+    v_assigned, a0 = participation_from_assign(assign, rates)
+    v_safe = jnp.maximum(v_assigned, 1e-6)
+    t_cmp = sp.tau_e * sp.gamma * d_sizes / sp.f_max
+    budget_bits = v_safe * (sp.t_max - t_cmp)
+    q_i = jnp.floor((budget_bits - z - RANGE_BITS) / z)
+    q = jnp.where(a0, jnp.clip(q_i, 1.0, float(q_policy_cap)), 1.0)
+    env_bits = z * q + z + RANGE_BITS
+    slack = sp.t_max - env_bits / v_safe
+    f_req = sp.tau_e * sp.gamma * d_sizes / jnp.maximum(slack, 1e-30)
+    f = jnp.where(a0 & (slack > 0),
+                  jnp.clip(f_req, sp.f_min, sp.f_max), sp.f_max)
+    return account_baseline(assign, rates, d_sizes, g_sq, sigma_sq,
+                            theta_max, q, f, sysp, z, q_cap)
+
+
+def baseline_principle(
+    round_idx, rates, d_sizes, g_sq, sigma_sq, theta_max,
+    sysp: SystemParams, z: int, q_cap: int,
+    q0: float = 2.0, double_every: int = 30, q_policy_cap: int = 16,
+) -> FastDecision:
+    """Traced ``fl.baselines.PrinciplePolicy`` (DAdaQuant-flavoured [24]):
+    q doubles on a fixed round schedule and scales with dataset size, no
+    wireless awareness — f pinned at f_max, deadline-missers time out.
+    ``round_idx`` is the traced scan round (the host policy's counter)."""
+    u = d_sizes.shape[0]
+    assign = greedy_assign(rates)
+    base = q0 * 2.0 ** (round_idx // double_every).astype(jnp.float32)
+    size_scale = d_sizes / jnp.mean(d_sizes)
+    q = jnp.clip(jnp.round(base * size_scale), 1.0, float(q_policy_cap))
+    f = jnp.full((u,), sysp.f_max)
+    return account_baseline(assign, rates, d_sizes, g_sq, sigma_sq,
+                            theta_max, q, f, sysp, z, q_cap, drop_late=True)

@@ -1,0 +1,234 @@
+"""Scenario-as-data: one frozen, jit-traversable pytree per experiment.
+
+A :class:`Scenario` carries everything that used to be scattered across
+``build_sim`` kwargs and single-BS assumptions baked into the channel code:
+
+  topology  — AP positions + association mode (cell-free multi-AP geometry;
+              A = 1 with ``mode="single_bs"`` is the exact legacy layout)
+  channel   — the :class:`repro.wireless.channel.ChannelParams` physics
+  data      — the client data partition (sizes mu/beta + Dirichlet alpha)
+  policy    — which compiled per-round controller runs inside the scan
+              (QCCF greedy/GA or one of the paper's baselines)
+  lyapunov  — the drift-plus-penalty constants (V, target_q for the eps
+              probe, and the heterogeneity-aware scheduling weight)
+
+Design split: everything that changes the *trace* (shapes, policy branch,
+association reduction) is a static meta field; everything continuous that
+a sweep would vary (AP positions → distances, the per-client KL vector,
+the eps budgets) flows through ``FleetSim`` as **dynamic jit arguments**
+(``ScenarioDyn``), so two scenarios sharing a pytree structure share one
+compiled scan — zero retrace (gated in CI, see tests/test_scenario.py).
+
+New topologies and baselines are data: build a ``Scenario`` (or register a
+preset with :func:`register_scenario`) instead of editing the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.wireless.channel import ChannelParams, ap_ring_layout
+
+# Policy selectors understood by the engine's round body. "qccf" is the
+# compiled greedy+KKT fast path, "qccf_ga" the full in-trace Algorithm 1;
+# the rest are the paper's Sec.-VI baselines as traced decision functions
+# (repro.sim.policy.BASELINES).
+POLICIES = ("qccf", "qccf_ga", "no_quant", "channel_allocate",
+            "principle", "same_size")
+
+ASSOCIATIONS = ("best", "combine")
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Cell-free serving geometry: A access points + association rule.
+
+    ``mode="single_bs"`` pins the exact legacy drop (radial distances from
+    one origin BS — no angle draw, so the key/rng stream is bit-identical
+    to the pre-scenario engine). ``mode="cellfree"`` drops clients as xy
+    positions and serves them from ``ap_xy``; ``association`` picks how
+    the (A, U, C) per-AP gains reduce to the effective (U, C) uplink:
+
+      best    — each client is served by its strongest-large-scale AP
+                (cell selection on path loss, the 3GPP default)
+      combine — non-coherent power combining over ALL APs (distributed
+                MRC, the cell-free ideal; gains sum over A)
+
+    Both reduce exactly to the single-BS draw at A = 1.
+    """
+
+    ap_xy: np.ndarray          # (A, 2) AP positions [m]
+    mode: str = "single_bs"    # "single_bs" | "cellfree"
+    association: str = "best"  # "best" | "combine"
+
+    def __post_init__(self) -> None:
+        assert self.mode in ("single_bs", "cellfree"), self.mode
+        assert self.association in ASSOCIATIONS, self.association
+        ap = np.asarray(self.ap_xy, np.float64)
+        assert ap.ndim == 2 and ap.shape[1] == 2, ap.shape
+        if self.mode == "single_bs":
+            assert ap.shape[0] == 1, "single_bs means exactly one AP"
+        object.__setattr__(self, "ap_xy", ap)
+
+    @property
+    def n_aps(self) -> int:
+        return int(self.ap_xy.shape[0])
+
+    def drop(self, key: jax.Array, params: ChannelParams) -> jax.Array:
+        """(A, U) client→AP distances for a fresh client drop.
+
+        single_bs: the legacy radial draw (one uniform per client, radius
+        floored at ``params.near_field_m``) reshaped to (1, U) — the SAME
+        values, bit for bit, as the pre-scenario ``drop_clients``.
+        cellfree: (r, phi) polar positions from two key splits, Euclidean
+        distance to every AP, floored at the same near-field limit.
+        """
+        if self.mode == "single_bs":
+            u = jax.random.uniform(key, (params.n_clients,))
+            r = params.radius_m * jnp.sqrt(u)
+            return jnp.maximum(r, params.near_field_m)[None, :]
+        k_r, k_phi = jax.random.split(key)
+        r = params.radius_m * jnp.sqrt(
+            jax.random.uniform(k_r, (params.n_clients,))
+        )
+        phi = 2.0 * jnp.pi * jax.random.uniform(k_phi, (params.n_clients,))
+        xy = jnp.stack([r * jnp.cos(phi), r * jnp.sin(phi)], axis=1)  # (U, 2)
+        ap = jnp.asarray(self.ap_xy, jnp.float32)                     # (A, 2)
+        d = jnp.linalg.norm(xy[None, :, :] - ap[:, None, :], axis=-1)
+        return jnp.maximum(d, params.near_field_m)
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """Client data partition: sizes D_i ~ N(mu, beta), Dirichlet(alpha)
+    label skew. ``mu``/``beta`` of ``None`` defer to the task defaults
+    (the tiny-task clamp lives in ``repro.fl.experiment.task_data_sizes``,
+    shared with ``build_experiment``)."""
+
+    mu: Optional[float] = None
+    beta: Optional[float] = None
+    alpha_dirichlet: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class LyapunovSpec:
+    """Drift-plus-penalty constants + the heterogeneity scheduling weight.
+
+    ``hetero_weight`` scales the per-client KL(client label histogram ||
+    global histogram) boost applied to the data-term's scheduling cost
+    (``policy.finish_decision``/``finish_host`` and the GA fitness):
+    excluding a high-KL client costs ``(1 + hetero_weight * KL_i)`` times
+    more, so the controller schedules label-diverse clients more eagerly
+    (2308.03521-style heterogeneity-aware scheduling). 0 restores the
+    heterogeneity-blind objective exactly.
+    """
+
+    v_weight: float = 100.0
+    target_q: float = 6.0
+    hetero_weight: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One whole experiment configuration as data. All fields are frozen
+    and hashable-or-array, so a Scenario can ride a jit boundary as a
+    pytree (arrays as leaves) or sit in a static argument (everything
+    else); ``FleetSim`` splits it that way via :meth:`dyn`-style leaves."""
+
+    name: str
+    topology: Topology
+    channel: ChannelParams
+    data: DataSpec = DataSpec()
+    policy: str = "qccf"
+    lyapunov: LyapunovSpec = LyapunovSpec()
+
+    def __post_init__(self) -> None:
+        assert self.policy in POLICIES, (
+            f"unknown policy {self.policy!r}; one of {POLICIES}"
+        )
+
+    def with_policy(self, policy: str) -> "Scenario":
+        return dataclasses.replace(self, policy=policy)
+
+    def with_fleet(self, n_clients: int, n_channels: int) -> "Scenario":
+        return dataclasses.replace(
+            self,
+            channel=dataclasses.replace(
+                self.channel, n_clients=n_clients, n_channels=n_channels
+            ),
+        )
+
+
+# --------------------------------------------------------------- presets
+
+ScenarioBuilder = Callable[..., Scenario]
+_REGISTRY: dict[str, ScenarioBuilder] = {}
+
+
+def register_scenario(name: str, builder: ScenarioBuilder) -> None:
+    """Register a preset builder; ``get_scenario(name, ...)`` resolves it.
+
+    A builder takes ``(n_clients, n_channels)`` keywords and returns a
+    Scenario — topologies/baselines become data, never engine edits.
+    """
+    _REGISTRY[name] = builder
+
+
+def get_scenario(name: str, *, n_clients: int = 64,
+                 n_channels: Optional[int] = None, **kw) -> Scenario:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown scenario {name!r}; have {sorted(_REGISTRY)}")
+    c = n_clients if n_channels is None else n_channels
+    return _REGISTRY[name](n_clients=n_clients, n_channels=c, **kw)
+
+
+def scenario_names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def _single_bs(n_clients: int, n_channels: int, **kw) -> Scenario:
+    """The paper's own setup: one BS at the origin, IID-ish shards."""
+    return Scenario(
+        name="single_bs",
+        topology=Topology(ap_xy=np.zeros((1, 2)), mode="single_bs"),
+        channel=ChannelParams(n_clients=n_clients, n_channels=n_channels),
+        **kw,
+    )
+
+
+def _cellfree_a4(n_clients: int, n_channels: int,
+                 association: str = "combine", **kw) -> Scenario:
+    """Four APs on a half-radius ring serving a cell-free uplink
+    (2412.20785's adaptive-quantization FL geometry)."""
+    params = ChannelParams(n_clients=n_clients, n_channels=n_channels)
+    return Scenario(
+        name="cellfree_a4",
+        topology=Topology(
+            ap_xy=ap_ring_layout(4, 0.5 * params.radius_m),
+            mode="cellfree", association=association,
+        ),
+        channel=params,
+        **kw,
+    )
+
+
+def _noniid_a01(n_clients: int, n_channels: int, **kw) -> Scenario:
+    """Single BS but heavy Dirichlet(0.1) label skew with the
+    heterogeneity-aware scheduling weight on (2308.03521)."""
+    kw.setdefault("data", DataSpec(alpha_dirichlet=0.1))
+    kw.setdefault("lyapunov", LyapunovSpec(hetero_weight=1.0))
+    return Scenario(
+        name="noniid_a01",
+        topology=Topology(ap_xy=np.zeros((1, 2)), mode="single_bs"),
+        channel=ChannelParams(n_clients=n_clients, n_channels=n_channels),
+        **kw,
+    )
+
+
+register_scenario("single_bs", _single_bs)
+register_scenario("cellfree_a4", _cellfree_a4)
+register_scenario("noniid_a01", _noniid_a01)

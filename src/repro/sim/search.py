@@ -160,18 +160,21 @@ def evaluate_population(
     v_weight: float,
     q_cap: int,
     repair_infeasible: bool,
+    hetero=None,
 ) -> jax.Array:
     """(P,) drift-plus-penalty objective J0 per chromosome (eq. 26, sound
     form): lam1 * data_term + lam2 * quant_term + V * energy, through the
-    same ``policy.finish_decision`` path as the greedy fast path. With
-    ``repair_infeasible`` False, chromosomes whose scheduled set needed the
-    feasibility drop get ``J0_INFEASIBLE`` (the paper's fitness-0 rule)."""
+    same ``policy.finish_decision`` path as the greedy fast path (incl. the
+    heterogeneity scheduling multiplier ``hetero``, so the GA's fitness
+    favours keeping high-KL clients scheduled). With ``repair_infeasible``
+    False, chromosomes whose scheduled set needed the feasibility drop get
+    ``J0_INFEASIBLE`` (the paper's fitness-0 rule)."""
 
     def eval_one(assign):
         v_assigned, a0 = fast_policy.participation_from_assign(assign, rates)
         fd = fast_policy.finish_decision(
             assign, v_assigned, a0, d_sizes, g_sq, sigma_sq, theta_max, lam2,
-            sysp, z, v_weight, q_cap=q_cap,
+            sysp, z, v_weight, q_cap=q_cap, hetero=hetero,
         )
         j0 = (lam1 * fd.data_term + lam2 * fd.quant_term
               + v_weight * jnp.sum(fd.energy))
@@ -199,6 +202,7 @@ def ga_decide(
     v_weight: float,
     cfg: GAConfig = GAConfig(),
     q_cap: int = 8,
+    hetero=None,
 ) -> fast_policy.FastDecision:
     """Algorithm 1, fully traced: GA over assignments + KKT fitness.
 
@@ -224,7 +228,7 @@ def ga_decide(
         pop, best_assign, best_j0 = carry
         j0 = evaluate_population(
             pop, rates, d_sizes, g_sq, sigma_sq, theta_max, lam1, lam2,
-            sysp, z, v_weight, q_cap, cfg.repair_infeasible,
+            sysp, z, v_weight, q_cap, cfg.repair_infeasible, hetero=hetero,
         )
         i_star = jnp.argmin(j0)                                # ties -> first
         better = j0[i_star] < best_j0
@@ -241,7 +245,54 @@ def ga_decide(
     v_assigned, a0 = fast_policy.participation_from_assign(best_assign, rates)
     return fast_policy.finish_decision(
         best_assign, v_assigned, a0, d_sizes, g_sq, sigma_sq, theta_max,
-        lam2, sysp, z, v_weight, q_cap=q_cap,
+        lam2, sysp, z, v_weight, q_cap=q_cap, hetero=hetero,
+    )
+
+
+# ------------------------------------------------- compiled SameSize [26]
+
+def baseline_same_size(
+    key: jax.Array,
+    rates: jax.Array,      # (U, C)
+    d_sizes: jax.Array,
+    g_sq: jax.Array,
+    sigma_sq: jax.Array,
+    theta_max: jax.Array,
+    lam1: jax.Array,
+    lam2: jax.Array,
+    sysp: SystemParams,
+    z: int,
+    v_weight: float,
+    cfg: GAConfig = GAConfig(),
+    q_cap: int = 8,
+) -> fast_policy.FastDecision:
+    """Traced ``fl.baselines.SameSizePolicy``: run the full GA+KKT search
+    pretending every client holds the MEAN dataset size, then re-account
+    energy/latency with the true sizes (the mismatch is the point).
+    Deadline-missers escalate to f_max; clients still late then time out.
+
+    Lives here (not ``sim.policy``) because it needs :func:`ga_decide`.
+    Heterogeneity-blind, like its host counterpart. The host mirror on the
+    shared key schedule is ``fl.baselines.SameSizePolicy`` wrapping a
+    :class:`HostGAPolicy` controller (it forwards ``set_round_key``).
+    """
+    fake_d = jnp.full_like(d_sizes, jnp.mean(d_sizes))
+    fd = ga_decide(
+        key, rates, fake_d, g_sq, sigma_sq, theta_max, lam1, lam2, sysp, z,
+        v_weight, cfg=cfg, q_cap=q_cap,
+    )
+    q_raw = fd.q.astype(jnp.float32)
+    f0 = jnp.where(fd.f > 0, fd.f, sysp.f_min)
+    first = fast_policy.account_baseline(
+        fd.assign, rates, d_sizes, g_sq, sigma_sq, theta_max, q_raw, f0,
+        sysp, z, q_cap,
+    )
+    # the host escalation loop raises one f at a time but each client's
+    # latency only depends on its own f, so one vectorized pass is exact
+    f2 = jnp.where(first.latency > sysp.t_max, sysp.f_max, f0)
+    return fast_policy.account_baseline(
+        fd.assign, rates, d_sizes, g_sq, sigma_sq, theta_max, q_raw, f2,
+        sysp, z, q_cap, drop_late=True, late_tol=1.0 + 1e-9,
     )
 
 
@@ -267,6 +318,7 @@ def run_ga_host(
     v_weight: float,
     cfg: GAConfig = GAConfig(),
     q_cap: int = 8,
+    hetero: Optional[np.ndarray] = None,
 ) -> fast_policy.FastDecision:
     """Numpy oracle of :func:`ga_decide` on the SAME key schedule.
 
@@ -288,7 +340,7 @@ def run_ga_host(
     def eval_one(assign: np.ndarray) -> tuple[fast_policy.FastDecision, float]:
         fd = fast_policy.finish_host(
             assign, rates, d_sizes, g_sq, sigma_sq, theta_max, lam2, sysp,
-            z, v_weight, q_cap=q_cap,
+            z, v_weight, q_cap=q_cap, hetero=hetero,
         )
         j0 = _j0_host(fd, lam1, lam2, v_weight)
         if not cfg.repair_infeasible:
@@ -357,12 +409,13 @@ class HostGAPolicy:
 
     def __init__(self, sysp: SystemParams, eps1: float, eps2: float,
                  v_weight: float, cfg: GAConfig = GAConfig(),
-                 q_cap: int = 8) -> None:
+                 q_cap: int = 8, hetero: Optional[np.ndarray] = None) -> None:
         self.sysp = sysp
         self.eps1, self.eps2 = float(eps1), float(eps2)
         self.v_weight = float(v_weight)
         self.cfg = cfg
         self.q_cap = int(q_cap)
+        self.hetero = None if hetero is None else np.asarray(hetero, np.float64)
         self.lambda1 = 0.0
         self.lambda2 = 0.0
         self._round_key: Optional[jax.Array] = None
@@ -378,6 +431,7 @@ class HostGAPolicy:
             np.asarray(ctx.g_sq), np.asarray(ctx.sigma_sq),
             np.asarray(ctx.theta_max), self.lambda1, self.lambda2,
             self.sysp, ctx.z, self.v_weight, cfg=self.cfg, q_cap=self.q_cap,
+            hetero=self.hetero,
         )
         return Decision(
             assign=fd.assign, a=fd.a, q=fd.q, f=fd.f, energy=fd.energy,

@@ -72,12 +72,31 @@ class _Floats(Strategy):
         return random.Random(_seed(salt, i, self.lo, self.hi)).uniform(self.lo, self.hi)
 
 
+class _SampledFrom(Strategy):
+    """Bounds-first over a finite pool: walk the elements in order before
+    falling back to seeded draws (so a sweep of n >= len(pool) examples
+    covers every element exactly)."""
+
+    def __init__(self, elements) -> None:
+        self.elements = list(elements)
+        assert self.elements, "sampled_from needs a non-empty pool"
+
+    def example(self, i: int, salt: str) -> Any:
+        if i < len(self.elements):
+            return self.elements[i]
+        return random.Random(_seed(salt, i, len(self.elements))).choice(self.elements)
+
+
 def integers(min_value: int, max_value: int) -> Strategy:
     return _Integers(min_value, max_value)
 
 
 def floats(min_value: float, max_value: float) -> Strategy:
     return _Floats(min_value, max_value)
+
+
+def sampled_from(elements) -> Strategy:
+    return _SampledFrom(elements)
 
 
 class HealthCheck:
@@ -167,6 +186,7 @@ def install() -> None:
     strat = types.ModuleType("hypothesis.strategies")
     strat.integers = integers
     strat.floats = floats
+    strat.sampled_from = sampled_from
     hyp.given = given
     hyp.settings = settings
     hyp.HealthCheck = HealthCheck

@@ -33,11 +33,28 @@ class ChannelParams:
     carrier_ghz: float = 2.4        # nu
     radius_m: float = 500.0
     antenna_gain_db: float = 5.0    # h_gain (antenna + misc)
+    # Clients closer than this to a serving point are snapped outward: the
+    # TR 38.901 log-distance fit is a far-field model and the sqrt-uniform
+    # disc drop would otherwise put a tail of clients at unphysical SNR.
+    near_field_m: float = 10.0
 
     @property
     def noise_power(self) -> float:
         """Noise power over one channel: N0 * B [W]."""
         return 10 ** (self.noise_psd_dbm / 10.0) * 1e-3 * self.bandwidth
+
+
+def ap_ring_layout(n_aps: int, radius_m: float) -> np.ndarray:
+    """(A, 2) access-point xy positions for a cell-free drop.
+
+    A = 1 is the degenerate single-BS layout (the AP at the origin);
+    A > 1 spreads the APs evenly on a ring of ``radius_m`` so the serving
+    points tile the client disc (PAPERS 2412.20785's cell-free geometry).
+    """
+    if n_aps == 1:
+        return np.zeros((1, 2))
+    phi = 2.0 * np.pi * np.arange(n_aps) / n_aps
+    return radius_m * np.stack([np.cos(phi), np.sin(phi)], axis=1)
 
 
 class ChannelModel:
@@ -48,7 +65,7 @@ class ChannelModel:
         self.rng = np.random.default_rng(seed)
         # Static client drop (distance drives large-scale fading).
         r = params.radius_m * np.sqrt(self.rng.uniform(size=params.n_clients))
-        self.distances = np.maximum(r, 10.0)  # keep out of the near field
+        self.distances = np.maximum(r, params.near_field_m)
 
     def path_loss_db(self) -> np.ndarray:
         """3GPP TR 38.901-flavoured UMa LOS path loss:

@@ -1,0 +1,113 @@
+"""Compiled-baseline parity: the traced baseline decision functions inside
+the one-compile scan vs their host counterparts in ``repro.fl.baselines``
+(ISSUE 6).
+
+``run_host_policy(channel="sim")`` replays the scan's key schedule exactly
+(same channel draws, same per-slot batch/quantizer keys), so when the host
+policy and the traced policy make the same decisions the two runs are
+bit-for-bit: schedules and q exact, model/accuracy to float tolerance,
+energy to f32-vs-f64 rounding. ``FleetSim.make_host_policy`` returns the
+matching host Policy for the sim's mode, so each parametrized case is
+
+    run_compiled(N)  ==  run_host_policy(make_host_policy(), N)
+
+The baselines quantize up to 16 bits (NoQuant nominally 32), so the sims
+are built with q_cap=16 — energy/latency are accounted at the RAW q (the
+paper's baselines pay fp32 airtime), the wire format clamps to q_cap.
+"""
+import numpy as np
+import pytest
+
+from repro.core.genetic import GAConfig
+from repro.sim import build_sim
+
+SEED = 21
+U = 8
+
+
+def _host_run(sim, n_rounds):
+    return sim.run_host_policy(sim.make_host_policy(), n_rounds, channel="sim")
+
+
+def _assert_parity(res_sim, res_host, *, acc_atol=1e-6, energy_rtol=1e-5):
+    q_host = np.stack([r.q_levels for r in res_host.records])
+    np.testing.assert_array_equal(res_sim.q_levels, q_host)
+    np.testing.assert_array_equal(
+        res_sim.n_scheduled, [r.n_scheduled for r in res_host.records]
+    )
+    np.testing.assert_allclose(
+        res_sim.energy, [r.energy for r in res_host.records],
+        rtol=energy_rtol, atol=1e-12,
+    )
+    np.testing.assert_allclose(
+        res_sim.latency, [r.latency for r in res_host.records],
+        rtol=energy_rtol, atol=1e-12,
+    )
+    np.testing.assert_allclose(
+        res_sim.payload_bits, [r.payload_bits for r in res_host.records],
+        rtol=energy_rtol,
+    )
+    acc_host = np.array([r.accuracy for r in res_host.records])
+    assert np.max(np.abs(acc_host - res_sim.accuracy)) <= acc_atol
+
+
+@pytest.mark.parametrize("mode", ["no_quant", "channel_allocate", "principle"])
+def test_fast_baseline_parity(mode):
+    """The closed-form baselines (greedy channels + per-policy q/f rule)
+    must replay their ``repro.fl.baselines`` counterparts exactly."""
+    sim = build_sim("tiny", n_clients=U, seed=SEED, q_cap=16,
+                    policy_mode=mode, n_test=256)
+    res_sim = sim.run_compiled(6)
+    res_host = _host_run(sim, 6)
+    _assert_parity(res_sim, res_host)
+
+
+def test_no_quant_pays_fp32_airtime():
+    """NoQuant's energy is accounted at q = 32 even though the wire format
+    clamps the recorded levels to q_cap — the whole point of the baseline."""
+    nq = build_sim("tiny", n_clients=U, seed=SEED, q_cap=16,
+                   policy_mode="no_quant", n_test=64)
+    qc = build_sim("tiny", n_clients=U, seed=SEED, q_cap=16,
+                   policy_mode="greedy", n_test=64)
+    res_nq = nq.run_compiled(4, with_eval=False)
+    res_qc = qc.run_compiled(4, with_eval=False)
+    assert np.all(res_nq.q_levels[res_nq.q_levels > 0] == 16)  # wire clamp
+    assert res_nq.energy.sum() > 2.0 * res_qc.energy.sum()
+
+
+def test_principle_round_schedule():
+    """Principle's q doubles with the round index (size-scaled): the round
+    index rides the scan's xs, so late rounds quantize harder."""
+    sim = build_sim("tiny", n_clients=U, seed=SEED, q_cap=16,
+                    policy_mode="principle", n_test=64)
+    res = sim.run_compiled(2, with_eval=False)
+    # base q0=2 scaled by D_i/mean(D): round 0 and 1 share the schedule
+    # (doubling kicks in at round 30); q is set for every assigned client
+    assert np.array_equal(res.q_levels[0] > 0, res.q_levels[1] > 0)
+    sched = res.q_levels[res.q_levels > 0]
+    assert sched.min() >= 1 and sched.max() <= 16
+
+
+def test_same_size_parity():
+    """SameSize [26] runs the GA on a mean-size fake context then
+    re-accounts with true sizes; the compiled version must replay the host
+    SameSizePolicy(HostGAPolicy) wrapper — including the f_max escalation
+    and the late-client drop."""
+    ga = GAConfig(generations=6, population=10, repair_infeasible=True)
+    sim = build_sim("tiny", n_clients=U, seed=SEED, q_cap=8,
+                    policy_mode="same_size", ga_config=ga, n_test=256)
+    res_sim = sim.run_compiled(4)
+    res_host = _host_run(sim, 4)
+    _assert_parity(res_sim, res_host)
+
+
+def test_baselines_ride_scenarios():
+    """A baseline policy on a cell-free scenario: the policy selector and
+    the topology are independent axes of the scenario pytree."""
+    sim = build_sim("tiny", scenario="cellfree_a4", n_clients=U, seed=SEED,
+                    q_cap=16, policy_mode="channel_allocate", n_test=256)
+    assert sim.policy_mode == "channel_allocate"
+    assert sim.channel.n_aps == 4
+    res_sim = sim.run_compiled(5)
+    res_host = _host_run(sim, 5)
+    _assert_parity(res_sim, res_host)

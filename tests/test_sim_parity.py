@@ -49,8 +49,11 @@ def test_setup_mirrors_build_experiment(pair):
                            seed=SEED)
     assert sim.z == exp.z
     np.testing.assert_array_equal(sim.fleet.d_sizes, exp.d_sizes.astype(np.int64))
+    # distances are (A, U) since the scenario refactor; legacy single-BS is
+    # the A = 1 row
+    assert sim.channel.n_aps == 1
     np.testing.assert_allclose(
-        np.asarray(sim.channel.distances), exp.channel.distances, rtol=1e-6
+        np.asarray(sim.channel.distances)[0], exp.channel.distances, rtol=1e-6
     )
 
 
@@ -90,9 +93,13 @@ def test_sim_channel_statistics_match_numpy_model():
     params = ChannelParams(n_clients=6, n_channels=8)
     host = ChannelModel(params, seed=5)
     sim = SimChannel.from_host_model(host)
-    np.testing.assert_allclose(np.asarray(sim.distances), host.distances, rtol=1e-6)
+    # distances / path loss are (A, U) since the scenario refactor; the
+    # single-BS host model maps onto the A = 1 row
     np.testing.assert_allclose(
-        np.asarray(sim.path_loss_db()), host.path_loss_db(), rtol=1e-5
+        np.asarray(sim.distances)[0], host.distances, rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(sim.path_loss_db())[0], host.path_loss_db(), rtol=1e-5
     )
     keys = jax.random.split(jax.random.PRNGKey(0), 400)
     sim_gains = np.stack([np.asarray(sim.draw_gains(k)) for k in keys])
