@@ -5,6 +5,10 @@ expert dispatch show up here).
 
   PYTHONPATH=src python benchmarks/collective_profile.py ARCH SHAPE \
       [multi | mesh=1x4x2x16] [flround] [skip] [packed] [savemoe]
+
+When ``REPRO_LEDGER`` is set, the byte attribution lands in the run
+ledger as an ``hlo`` event (and the lower+compile wall time as a
+``timing`` event) instead of living only on stdout.
 """
 import os, sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -25,6 +29,7 @@ def main():
     from repro.launch import steps
     from repro.launch.mesh import make_production_mesh, mesh_label
     from repro.models.config import INPUT_SHAPES
+    from repro.obs import default_ledger, timed_phase
     from repro.optim import adamw
 
     cfg = get_config(arch)
@@ -33,24 +38,41 @@ def main():
         cfg = long_context_variant(cfg)
     mesh = make_production_mesh(multi_pod=multi, shape=mesh_shape)
     policy = "save_moe_out" if "savemoe" in sys.argv else "full"
-    if fl:
-        lowered = steps.lower_fl_round(cfg, mesh, shape,
-                                       wire_packed="packed" in sys.argv)
-    elif shape.kind == "train":
-        lowered = steps.lower_train_step(cfg, mesh, shape, adamw(3e-4),
-                                         causal_skip=skip, remat_policy=policy)
-    elif shape.kind == "prefill":
-        lowered = steps.lower_prefill_step(cfg, mesh, shape)
-    else:
-        lowered = steps.lower_decode_step(cfg, mesh, shape)
-    hlo = lowered.compile().as_text()
+    led = default_ledger()
+    source = f"collective_profile[{arch},{shape_name},{mesh_label(mesh)}]"
+    with timed_phase("lower_compile", led, arch=arch, shape=shape_name,
+                     mesh=mesh_label(mesh)):
+        if fl:
+            lowered = steps.lower_fl_round(cfg, mesh, shape,
+                                           wire_packed="packed" in sys.argv)
+        elif shape.kind == "train":
+            lowered = steps.lower_train_step(
+                cfg, mesh, shape, adamw(3e-4),
+                causal_skip=skip, remat_policy=policy,
+            )
+        elif shape.kind == "prefill":
+            lowered = steps.lower_prefill_step(cfg, mesh, shape)
+        else:
+            lowered = steps.lower_decode_step(cfg, mesh, shape)
+        hlo = lowered.compile().as_text()
     res = weighted_collectives(hlo)
+    payload = {
+        "total_bytes": res["total_bytes"],
+        "bytes_by_kind": res["bytes"],
+        "counts": res["counts"],
+        "top_ops": res["top_ops"][:10],
+    }
     print(f"mesh {mesh_label(mesh)}: total weighted collective bytes/device: "
           f"{res['total_bytes']/1e9:.2f} GB")
     for t in res["top_ops"]:
         print(f"  {t['bytes']/1e9:9.2f} GB  {t['kind']:18s} {t['op']}")
     if mesh.shape.get("pod", 1) > 1:
         split = inter_axis_bytes(hlo, pod_partition_map(mesh))
+        payload["inter_axis_bytes"] = {
+            k: split[k] for k in ("inter_bytes", "intra_bytes",
+                                  "unattributed_bytes", "inter_by_kind",
+                                  "intra_by_kind")
+        }
         print(f"inter-pod {split['inter_bytes']/1e9:.2f} GB / "
               f"intra-pod {split['intra_bytes']/1e9:.2f} GB / "
               f"unattributed {split['unattributed_bytes']/1e9:.2f} GB")
@@ -58,6 +80,7 @@ def main():
             for kind, b in sorted(split[f"{side}_by_kind"].items(),
                                   key=lambda kv: -kv[1]):
                 print(f"  {side}-pod {b/1e9:9.2f} GB  {kind}")
+    led.hlo_event(source, payload, hlo_bytes=len(hlo))
 
 
 if __name__ == "__main__":

@@ -39,6 +39,9 @@ ARCHS = [
 ]
 SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.obs import default_ledger  # noqa: E402 — needs the src path
 
 SEQ4D_SHAPE = "1x4x2x16"            # pod x data x seq x model
 SEQ4D_SHAPES = ["train_4k", "prefill_32k"]   # seq axis is a train/prefill story
@@ -138,14 +141,21 @@ def main() -> int:
     ap.add_argument("--timeout", type=int, default=3600)
     args = ap.parse_args()
 
+    # sweep-level ledger: one record event per combo (the subprocesses
+    # inherit REPRO_LEDGER through env and add their own hlo/record rows)
+    led = default_ledger()
+
     if args.wire_ratio:
         os.makedirs(os.path.dirname(args.wire_out), exist_ok=True)
         print(f"wire-ratio sweep: {len(args.arch)} archs -> {args.wire_out}",
               flush=True)
+        led.run_header(name="dryrun_sweep[wire_ratio]", entry="dryrun_sweep",
+                       n_archs=len(args.arch))
         n_ok = 0
         for i, a in enumerate(args.arch):
             r = run_wire_ratio(a, args.wire_out, timeout=args.timeout)
             n_ok += r["ok"]
+            led.record("wire_ratio_sweep", r)
             print(
                 f"[{i+1}/{len(args.arch)}] {a} ok={r['ok']} "
                 f"ratio={r['ratio']} {r['wall_s']}s {r['err'][:160]}",
@@ -164,10 +174,13 @@ def main() -> int:
         shapes = args.shape or (SEQ4D_SHAPES if m == "seq4d" else SHAPES)
         combos += [(a, s, m) for a in args.arch for s in shapes]
     print(f"sweep: {len(combos)} combos -> {args.out}", flush=True)
+    led.run_header(name=f"dryrun_sweep[{args.mesh}]", entry="dryrun_sweep",
+                   n_combos=len(combos))
     n_ok = 0
     for i, (a, s, m) in enumerate(combos):
         r = run_combo(a, s, m, args.out, timeout=args.timeout)
         n_ok += r["ok"]
+        led.record("dryrun_sweep", r)
         print(
             f"[{i+1}/{len(combos)}] {a} {s} {m} "
             f"ok={r['ok']} {r['wall_s']}s {r['err'][:160]}", flush=True,
@@ -176,6 +189,7 @@ def main() -> int:
         for a in args.arch:
             r = run_combo(a, "train_4k", "multi", args.out, fl_round=True,
                           timeout=args.timeout)
+            led.record("dryrun_sweep", r)
             print(f"[fl_round] {a} ok={r['ok']} {r['wall_s']}s {r['err'][:160]}", flush=True)
     print(f"done: {n_ok}/{len(combos)} ok", flush=True)
     return 0 if n_ok == len(combos) else 1

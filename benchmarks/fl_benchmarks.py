@@ -11,11 +11,10 @@ figure's headline number.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.fl import build_experiment, run_policy
+from repro.obs import default_ledger, timed_phase
 
 POLICIES = ("qccf", "no_quant", "channel_allocate", "principle_24", "same_size_26")
 
@@ -41,20 +40,24 @@ def _warm_jits(exp) -> None:
 def _run(policy, task, beta, n_rounds, seed=0, v_weight=100.0):
     """Returns (result, round_wall_s, setup_wall_s).
 
-    ``round_wall_s`` covers ONLY ``exp.run`` (the communication rounds);
-    experiment assembly (datasets, GA setup) and the jit warmups (eval and
-    the tau-step local-SGD trainer) are measured separately so us_per_call
-    is not inflated by one-time costs.
+    ``round_wall_s`` covers ONLY ``exp.run`` (the communication rounds):
+    ``timed_phase`` runs the warmup — experiment assembly and the jit
+    pre-compiles (eval, the tau-step local-SGD trainer) — before the clock
+    starts, so us_per_call is not inflated by one-time costs. Phase
+    timings stream to the ``REPRO_LEDGER`` ledger when one is configured.
     """
+    import time
+
+    led = default_ledger()
     t0 = time.time()
     exp = build_experiment(policy, task=task, beta=beta, seed=seed,
                            v_weight=v_weight)
-    _warm_jits(exp)
-    setup = time.time() - t0
-    t0 = time.time()
-    res = exp.run(n_rounds, eval_every=max(n_rounds // 10, 1))
-    wall = time.time() - t0
-    return res, wall, setup
+    warm = lambda: _warm_jits(exp)  # noqa: E731 — timed_phase warmup hook
+    with timed_phase("fl_run", led, warmup=warm, policy=policy, task=task,
+                     beta=beta, rounds=n_rounds) as t:
+        res = exp.run(n_rounds, eval_every=max(n_rounds // 10, 1))
+    setup = time.time() - t0 - t.seconds
+    return res, t.seconds, setup
 
 
 def bench_v_tradeoff(task: str = "tiny", n_rounds: int = 12) -> list[tuple]:
@@ -107,13 +110,15 @@ def bench_quant_levels(task: str = "femnist", n_rounds: int = 10) -> list[tuple]
     payload (Z = 246590) so the latency constraint actually binds — on the
     tiny task q is insensitive to D by construction."""
     rows = []
+    led = default_ledger()
     for pol in ("qccf", "channel_allocate", "same_size_26", "principle_24"):
         exp = build_experiment(pol, task=task, beta=300.0, seed=7)
         d = np.array([c.d_size for c in exp.clients], dtype=np.float64)
-        _warm_jits(exp)
-        t0 = time.time()
-        res = exp.run(n_rounds, eval_every=n_rounds)
-        wall = time.time() - t0
+        with timed_phase("fl_quant_levels", led,
+                         warmup=lambda e=exp: _warm_jits(e),
+                         policy=pol, task=task, rounds=n_rounds) as t:
+            res = exp.run(n_rounds, eval_every=n_rounds)
+        wall = t.seconds
         qs = [r.q_levels[r.q_levels > 0].mean()
               for r in res.records if (r.q_levels > 0).any()]
         first = float(np.mean(qs[: max(len(qs) // 3, 1)])) if qs else 0.0

@@ -172,23 +172,23 @@ def bench_moe_alltoall(timeout: int = 1800) -> list[tuple]:
     )]
 
 
-def bench_kernels() -> list[tuple]:
+def bench_kernels(ledger=None) -> list[tuple]:
     import jax
     import jax.numpy as jnp
     from repro.kernels import ops
+    from repro.obs import default_ledger, timed_phase
 
+    led = ledger if ledger is not None else default_ledger()
     rows = []
     key = jax.random.PRNGKey(0)
     flat = jax.random.normal(key, (1 << 20,))  # 1M params
     for q in (2, 4, 8):
-        f = lambda: ops.quantize_flat(key, flat, q)
-        out = f()
-        jax.block_until_ready(out)
-        t0 = time.time()
+        warm = lambda: jax.block_until_ready(ops.quantize_flat(key, flat, q))
         n = 5
-        for _ in range(n):
-            jax.block_until_ready(ops.quantize_flat(key, flat, q))
-        us = (time.time() - t0) / n * 1e6
+        with timed_phase("kernel_quantize", led, warmup=warm, q=q, n=n) as t:
+            for _ in range(n):
+                jax.block_until_ready(ops.quantize_flat(key, flat, q))
+        us = t.seconds / n * 1e6
         # wire size vs fp32 baseline (paper eq. 5)
         ratio = (flat.size * q + flat.size + 32) / (flat.size * 32)
         rows.append((f"kernel_quantize[q={q},Z=1M]", us, f"wire_ratio={ratio:.3f}"))
@@ -198,19 +198,33 @@ def bench_kernels() -> list[tuple]:
     sgns = jnp.broadcast_to(signs, (k,) + signs.shape)
     scales = jnp.full((k,), scale)
     w = jnp.full((k,), 1.0 / k)
-    jax.block_until_ready(ops.aggregate_uploads(idxs, sgns, scales, w, 4))
-    t0 = time.time()
-    for _ in range(3):
-        jax.block_until_ready(ops.aggregate_uploads(idxs, sgns, scales, w, 4))
+    agg = lambda: jax.block_until_ready(
+        ops.aggregate_uploads(idxs, sgns, scales, w, 4)
+    )
+    with timed_phase("kernel_aggregate", led, warmup=agg, k=k, n=3) as t:
+        for _ in range(3):
+            agg()
     rows.append((
-        f"kernel_aggregate[K={k},Z=1M]", (time.time() - t0) / 3 * 1e6,
+        f"kernel_aggregate[K={k},Z=1M]", t.seconds / 3 * 1e6,
         "fused=dequant+weighted_sum",
     ))
     return rows
 
 
 def main() -> None:
+    import argparse
+
     from benchmarks import fl_benchmarks as flb
+    from repro.obs import default_ledger, maybe_trace
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ledger", default=None, metavar="PATH",
+                    help="JSONL run-ledger path (default: $REPRO_LEDGER)")
+    ap.add_argument("--xprof", default=None, metavar="DIR",
+                    help="capture a profiler trace of the kernel microbench")
+    args = ap.parse_args()
+    ledger = default_ledger(args.ledger)
+    ledger.run_header(name="benchmarks.run", entry="run.main")
 
     t_start = time.time()
     print("name,us_per_call,derived", flush=True)
@@ -221,7 +235,8 @@ def main() -> None:
 
     from benchmarks import sim_benchmarks as simb
 
-    emit(bench_kernels())
+    with maybe_trace(args.xprof):
+        emit(bench_kernels(ledger=ledger))
     # CPU-sized fleet rows; the 1024-client scale run is
     #   PYTHONPATH=src python benchmarks/sim_benchmarks.py --clients 1024
     # (add --policy=ga for the compiled Algorithm-1 population search;

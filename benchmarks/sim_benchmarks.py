@@ -21,6 +21,14 @@ without executing (the CI manual-dispatch job uses this: lowering success is
 the gate, no CPU burn). ``--json`` appends machine-readable rows to
 ``BENCH_sim.json`` at the repo root (rounds/sec, compile_s, U, C, policy,
 scenario, aggregator) so the perf trajectory across PRs stays recorded.
+
+Telemetry (``repro.obs``): ``--telemetry`` builds the sim with the in-scan
+metric taps on (still one compile — the taps ride the scan as extra ys);
+``--ledger PATH`` (or the ``REPRO_LEDGER`` env var) streams the run header,
+per-round rows, and phase timings to the structured JSONL ledger; ``--xprof
+DIR`` captures a profiler trace of ONLY the steady-state rounds (compile
+excluded), attributed to the named scopes (``pallas_quantize``,
+``fleet_local_sgd``, ``kkt_solve``, ...).
 """
 from __future__ import annotations
 
@@ -57,6 +65,9 @@ def bench_fleet_scale(
     ga_generations: int = 30,
     ga_population: int = 32,
     json_rows: list | None = None,
+    telemetry: bool = False,
+    ledger=None,
+    xprof: str | None = None,
 ) -> list[tuple]:
     """U-client QCCF rounds in one compiled scan; rows are run.py-style CSV.
 
@@ -66,9 +77,16 @@ def bench_fleet_scale(
     pytree through ``build_sim``); ``policy`` can be the greedy fast path,
     the compiled GA, or any traced baseline. When ``json_rows`` is a list,
     a machine-readable record is appended per executed config.
+
+    ``telemetry`` turns the in-scan metric taps on; ``ledger`` (an
+    ``repro.obs.Ledger``, default = ``REPRO_LEDGER`` resolution) receives
+    the run header, phase timings, and — with telemetry — per-round rows;
+    ``xprof`` captures a profiler trace of the steady-state rounds only.
     """
     import jax
     from repro.core.genetic import GAConfig
+    from repro.obs import (MetricsConfig, default_ledger, maybe_trace,
+                           metrics_to_dict, timed_phase)
     from repro.sim import build_sim
 
     assert policy in BENCH_POLICIES, policy
@@ -80,47 +98,65 @@ def bench_fleet_scale(
     c = u if n_channels is None else int(n_channels)
     scen = scenario or "single_bs"
     tag = f"U={u},C={c},{task},{scen},{policy}"
+    led = ledger if ledger is not None else default_ledger()
+    tele = MetricsConfig(enabled=True) if telemetry else None
     rows = []
-    t0 = time.time()
-    sim = build_sim(
-        task, scenario=scenario, n_clients=u, n_channels=c, mu=mu, beta=beta,
-        seed=seed, batch_size=batch_size, n_test=256,
-        policy_mode=policy_mode, ga_config=ga_config,
+    with timed_phase("build", led, tag=tag) as t_build:
+        sim = build_sim(
+            task, scenario=scenario, n_clients=u, n_channels=c, mu=mu,
+            beta=beta, seed=seed, batch_size=batch_size, n_test=256,
+            policy_mode=policy_mode, ga_config=ga_config, telemetry=tele,
+        )
+    led.run_header(
+        name=f"sim_fleet[{tag}]", entry="bench_fleet_scale",
+        policy=policy_mode, scenario=scen, u=u, c=c, rounds=n_rounds,
+        seed=seed, telemetry=bool(telemetry),
     )
-    build_s = time.time() - t0
     rows.append((
-        f"sim_build[{tag}]", build_s * 1e6,
+        f"sim_build[{tag}]", t_build.seconds * 1e6,
         f"z={sim.z};n_max={int(sim.fleet.x.shape[1])};policy={policy_mode}"
         f";A={sim.channel.n_aps};assoc={sim.channel.association}",
     ))
 
     keys, ridx = sim._scan_xs(n_rounds)
     carry = sim._init_carry()
-    t0 = time.time()
-    lowered = sim._scan_fn(with_eval).lower(sim._dyn, carry, keys, ridx)
-    lower_s = time.time() - t0
+    with timed_phase("lower", led, tag=tag, rounds=n_rounds) as t_lower:
+        lowered = sim._scan_fn(with_eval).lower(sim._dyn, carry, keys, ridx)
+    hlo_bytes = len(lowered.as_text())
+    led.hlo_event(f"sim_lower[{tag}]", {"hlo_bytes": hlo_bytes},
+                  rounds=n_rounds)
     rows.append((f"sim_lower[{tag},rounds={n_rounds}]",
-                 lower_s * 1e6, f"hlo_bytes={len(lowered.as_text())}"))
+                 t_lower.seconds * 1e6, f"hlo_bytes={hlo_bytes}"))
     if dry_run:
         rows.append((f"sim_dryrun[{tag},rounds={n_rounds}]",
                      0.0, "lowered=ok"))
         return rows
 
-    t0 = time.time()
-    compiled = lowered.compile()
-    compile_s = time.time() - t0
+    with timed_phase("compile", led, tag=tag, rounds=n_rounds) as t_compile:
+        compiled = lowered.compile()
     rows.append((f"sim_compile[{tag},rounds={n_rounds}]",
-                 compile_s * 1e6, "one_compile"))
+                 t_compile.seconds * 1e6, "one_compile"))
 
-    t0 = time.time()
-    (flat, *_), out = compiled(sim._dyn, carry, keys, ridx)
-    jax.block_until_ready(flat)
-    run_s = time.time() - t0
+    with maybe_trace(xprof):
+        with timed_phase("run", led, tag=tag, rounds=n_rounds) as t_run:
+            (flat, *_), out = compiled(sim._dyn, carry, keys, ridx)
+            jax.block_until_ready(flat)
+    run_s = t_run.seconds
     import numpy as np
 
     n_sched = np.asarray(out["n_scheduled"])
     qs = np.asarray(out["q_levels"])
     mean_q = float(qs[qs > 0].mean()) if (qs > 0).any() else 0.0
+    if led.enabled:
+        tapped = ({k: np.asarray(v)
+                   for k, v in metrics_to_dict(out["metrics"]).items()}
+                  if "metrics" in out else {})
+        energy = np.asarray(out["energy"])
+        for n in range(n_rounds):
+            led.round_row(
+                n, energy=float(energy[n]), n_scheduled=int(n_sched[n]),
+                **{k: float(v[n]) for k, v in tapped.items()},
+            )
     rows.append((
         f"sim_fleet[{tag},rounds={n_rounds}]",
         run_s / n_rounds * 1e6,
@@ -135,8 +171,8 @@ def bench_fleet_scale(
             "scenario": scen,
             "aggregator": "pallas-tiled",
             "rounds_per_s": round(n_rounds / run_s, 5),
-            "compile_s": round(compile_s, 3),
-            "lower_s": round(lower_s, 3),
+            "compile_s": round(t_compile.seconds, 3),
+            "lower_s": round(t_lower.seconds, 3),
             "run_s": round(run_s, 3),
             "mean_sched": round(float(n_sched.mean()), 2),
             "mean_q": round(mean_q, 3),
@@ -159,23 +195,31 @@ def bench_baseline_energy(
     ga_generations: int = 8,
     ga_population: int = 12,
     json_rows: list | None = None,
+    telemetry: bool = False,
+    ledger=None,
 ) -> list[tuple]:
     """QCCF vs the paper's baselines on ONE scenario, one compile per policy.
 
     Every policy sees the same scenario pytree, seed, and per-round key
     schedule, so channel draws / client drops / minibatches are identical —
     the only difference is the decision function traced into the scan.
-    Records cumulative uplink+compute energy, final accuracy, and
-    rounds/energy-to-target-accuracy (target defaults to the worst final
-    accuracy across policies, i.e. a level every policy reaches — the
-    paper's "matched accuracy" comparison of Figs. 3/4).
+    Records cumulative uplink+compute energy, final accuracy, mean
+    realized quantization level, and rounds/energy-to-target-accuracy
+    (target defaults to the worst final accuracy across policies, i.e. a
+    level every policy reaches — the paper's "matched accuracy" comparison
+    of Figs. 3/4). ``telemetry``/``ledger`` thread straight into
+    ``build_sim`` — ``run_compiled`` then writes the run header and
+    per-round rows itself.
     """
     import numpy as np
     from repro.core.genetic import GAConfig
+    from repro.obs import MetricsConfig, default_ledger
     from repro.sim import build_sim
 
     ga_config = GAConfig(generations=ga_generations, population=ga_population,
                          repair_infeasible=True)
+    led = ledger if ledger is not None else default_ledger()
+    tele = MetricsConfig(enabled=True) if telemetry else None
     rows = []
     results: dict = {}
     for pol in policies:
@@ -184,20 +228,24 @@ def bench_baseline_energy(
             task, scenario=scenario, n_clients=u, n_channels=n_channels,
             mu=mu, beta=beta, seed=seed, batch_size=batch_size, n_test=256,
             policy_mode=_POLICY_MODES.get(pol, pol), ga_config=ga_config,
+            telemetry=tele, ledger=led,
         )
         t0 = time.time()
         res = sim.run_compiled(n_rounds, with_eval=True)
         run_s = time.time() - t0
+        qs = np.asarray(res.q_levels)
+        mean_q = float(qs[qs > 0].mean()) if (qs > 0).any() else 0.0
         results[pol] = (
             np.asarray(res.energy, dtype=np.float64),
             np.asarray(res.accuracy, dtype=np.float64),
             run_s,
+            mean_q,
         )
 
     if target_acc is None:
-        target_acc = min(float(acc[-1]) for _, acc, _ in results.values())
+        target_acc = min(float(acc[-1]) for _, acc, _, _ in results.values())
 
-    for pol, (energy, acc, run_s) in results.items():
+    for pol, (energy, acc, run_s, mean_q) in results.items():
         cum_e = np.cumsum(energy)
         hit = np.nonzero(acc >= target_acc)[0]
         r_hit = int(hit[0]) + 1 if hit.size else -1
@@ -207,7 +255,7 @@ def bench_baseline_energy(
             run_s / n_rounds * 1e6,
             f"cum_energy_J={float(cum_e[-1]):.5f};final_acc={float(acc[-1]):.4f}"
             f";target_acc={target_acc:.4f};rounds_to_target={r_hit}"
-            f";energy_to_target_J={e_hit:.5f}",
+            f";energy_to_target_J={e_hit:.5f};mean_q={mean_q:.2f}",
         ))
         if json_rows is not None:
             json_rows.append({
@@ -220,6 +268,7 @@ def bench_baseline_energy(
                 "target_acc": round(float(target_acc), 5),
                 "rounds_to_target": r_hit,
                 "energy_to_target_J": round(e_hit, 6),
+                "mean_q": round(mean_q, 3),
             })
     return rows
 
@@ -293,7 +342,17 @@ def main() -> None:
     ap.add_argument("--ga-population", type=int, default=32)
     ap.add_argument("--json", action="store_true",
                     help=f"append machine-readable rows to {BENCH_JSON}")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the in-scan metric taps (repro.obs) — "
+                         "still one compile")
+    ap.add_argument("--ledger", default=None, metavar="PATH",
+                    help="JSONL run-ledger path (default: $REPRO_LEDGER)")
+    ap.add_argument("--xprof", default=None, metavar="DIR",
+                    help="capture a profiler trace of the steady-state "
+                         "rounds into DIR")
     args = ap.parse_args()
+    from repro.obs import default_ledger
+    ledger = default_ledger(args.ledger)
     print("name,us_per_call,derived", flush=True)
     json_rows: list | None = [] if args.json else None
     if args.baseline:
@@ -305,6 +364,7 @@ def main() -> None:
             seed=args.seed, target_acc=args.target_acc,
             ga_generations=args.ga_generations,
             ga_population=args.ga_population, json_rows=json_rows,
+            telemetry=args.telemetry, ledger=ledger,
         )
     else:
         rows = bench_fleet_scale(
@@ -315,6 +375,7 @@ def main() -> None:
             policy=args.policy, scenario=args.scenario,
             ga_generations=args.ga_generations,
             ga_population=args.ga_population, json_rows=json_rows,
+            telemetry=args.telemetry, ledger=ledger, xprof=args.xprof,
         )
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)

@@ -10,6 +10,14 @@ set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Run ledger (repro.obs): off unless the caller sets REPRO_LEDGER; when
+# set, every entry point run under this gate streams its run header /
+# timings / round rows to that JSONL file (CI uploads it as an artifact).
+if [ -n "${REPRO_LEDGER:-}" ]; then
+    export REPRO_LEDGER
+    echo "tier1: run ledger -> $REPRO_LEDGER"
+fi
+
 collect_log="$(mktemp)"
 trap 'rm -f "$collect_log"' EXIT
 

@@ -21,6 +21,7 @@ import numpy as np
 from repro.core import quantization
 from repro.core.genetic import Decision, RoundContext, SystemParams
 from repro.fl.client import FLClient
+from repro.obs.profile import annotate as _annotate
 from repro.wireless.channel import ChannelModel
 
 Pytree = Any
@@ -135,7 +136,8 @@ class FLExperiment:
         acc, loss = self.eval_fn(self.params)
         for n in range(n_rounds):
             ctx = self._context()
-            dec = self.policy.decide(ctx)
+            with _annotate("fl_decide"):
+                dec = self.policy.decide(ctx)
             v_assigned = np.zeros(len(self.clients))
             for c, cid in enumerate(dec.assign):
                 if cid >= 0:
@@ -145,27 +147,35 @@ class FLExperiment:
             weights = []
             d_n = float(np.sum(dec.a * self.d_sizes))
             payload = 0.0
-            for i, client in enumerate(self.clients):
-                if not dec.a[i]:
-                    continue
-                theta_i, g_sq, sig_sq = client.local_update(
-                    self.params, self.sysp.tau, self.lr
-                )
-                self.g_sq[i] = 0.7 * self.g_sq[i] + 0.3 * g_sq
-                self.sigma_sq[i] = 0.7 * self.sigma_sq[i] + 0.3 * max(sig_sq, 1e-8)
-                self.key, sub = jax.random.split(self.key)
-                q_i = int(max(dec.q[i], 1))
-                quantized, tmax = quantization.quantize_pytree(sub, theta_i, q_i)
-                self.theta_max[i] = float(tmax)
-                uploads.append(quantized)
-                weights.append(self.d_sizes[i] / d_n)
-                payload += quantization.payload_bits(self.z, q_i)
+            with _annotate("fl_local_quant"):
+                for i, client in enumerate(self.clients):
+                    if not dec.a[i]:
+                        continue
+                    theta_i, g_sq, sig_sq = client.local_update(
+                        self.params, self.sysp.tau, self.lr
+                    )
+                    self.g_sq[i] = 0.7 * self.g_sq[i] + 0.3 * g_sq
+                    self.sigma_sq[i] = (
+                        0.7 * self.sigma_sq[i] + 0.3 * max(sig_sq, 1e-8)
+                    )
+                    self.key, sub = jax.random.split(self.key)
+                    q_i = int(max(dec.q[i], 1))
+                    quantized, tmax = quantization.quantize_pytree(
+                        sub, theta_i, q_i
+                    )
+                    self.theta_max[i] = float(tmax)
+                    uploads.append(quantized)
+                    weights.append(self.d_sizes[i] / d_n)
+                    payload += quantization.payload_bits(self.z, q_i)
 
             if uploads:
-                new = jax.tree_util.tree_map(
-                    lambda *leaves: sum(w * l for w, l in zip(weights, leaves)),
-                    *uploads,
-                )
+                with _annotate("fl_aggregate"):
+                    new = jax.tree_util.tree_map(
+                        lambda *leaves: sum(
+                            w * l for w, l in zip(weights, leaves)
+                        ),
+                        *uploads,
+                    )
                 self.params = new
 
             self.policy.commit(dec)

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.obs.profile import scope as _profile_scope
+
 BLOCK_M = 256
 LANES = 128
 
@@ -53,24 +55,25 @@ def quantize(
     assert lanes == LANES and m % block_m == 0, (x.shape, block_m)
     grid = (m // block_m,)
     kernel = functools.partial(_quant_kernel, q_bits=q_bits)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pl.ANY),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((m, LANES), jnp.uint8),
-            jax.ShapeDtypeStruct((m, LANES), jnp.uint8),
-        ],
-        interpret=interpret,
-    )(x, rbits, scale.reshape(1, 1))
+    with _profile_scope("pallas_quantize"):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+                pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+                pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pl.ANY),
+            ],
+            out_specs=[
+                pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+                pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((m, LANES), jnp.uint8),
+                jax.ShapeDtypeStruct((m, LANES), jnp.uint8),
+            ],
+            interpret=interpret,
+        )(x, rbits, scale.reshape(1, 1))
 
 
 def _dequant_kernel(idx_ref, sign_ref, scale_ref, out_ref, *, q_bits: int):
@@ -95,18 +98,19 @@ def dequantize(
         f"dequantize: signs {signs.shape} must match idx {idx.shape}"
     )
     kernel = functools.partial(_dequant_kernel, q_bits=q_bits)
-    return pl.pallas_call(
-        kernel,
-        grid=(m // block_m,),
-        in_specs=[
-            pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pl.ANY),
-        ],
-        out_specs=pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, LANES), jnp.float32),
-        interpret=interpret,
-    )(idx, signs, scale.reshape(1, 1))
+    with _profile_scope("pallas_dequantize"):
+        return pl.pallas_call(
+            kernel,
+            grid=(m // block_m,),
+            in_specs=[
+                pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+                pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+                pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pl.ANY),
+            ],
+            out_specs=pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((m, LANES), jnp.float32),
+            interpret=interpret,
+        )(idx, signs, scale.reshape(1, 1))
 
 
 def _aggregate_kernel(idx_ref, sign_ref, coef_ref, out_ref, *, block_k: int):
@@ -185,19 +189,22 @@ def aggregate(
     kp, mp = k + k_pad, m + m_pad
 
     kernel = functools.partial(_aggregate_kernel, block_k=block_k)
-    out = pl.pallas_call(
-        kernel,
-        grid=(mp // block_m, kp // block_k),
-        in_specs=[
-            pl.BlockSpec((block_k, block_m, LANES), lambda i, kb: (kb, i, 0)),
-            pl.BlockSpec((block_k, block_m, LANES), lambda i, kb: (kb, i, 0)),
-            # NOT memory_space=ANY: the coef tile is windowed over the k
-            # grid axis, and automatic block slicing needs a concrete
-            # (VMEM) space — ANY hands the kernel the full-size ref.
-            pl.BlockSpec((1, block_k), lambda i, kb: (0, kb)),
-        ],
-        out_specs=pl.BlockSpec((block_m, LANES), lambda i, kb: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((mp, LANES), jnp.float32),
-        interpret=interpret,
-    )(idx, signs, coef.reshape(1, kp))
+    with _profile_scope("pallas_aggregate"):
+        out = pl.pallas_call(
+            kernel,
+            grid=(mp // block_m, kp // block_k),
+            in_specs=[
+                pl.BlockSpec((block_k, block_m, LANES),
+                             lambda i, kb: (kb, i, 0)),
+                pl.BlockSpec((block_k, block_m, LANES),
+                             lambda i, kb: (kb, i, 0)),
+                # NOT memory_space=ANY: the coef tile is windowed over the k
+                # grid axis, and automatic block slicing needs a concrete
+                # (VMEM) space — ANY hands the kernel the full-size ref.
+                pl.BlockSpec((1, block_k), lambda i, kb: (0, kb)),
+            ],
+            out_specs=pl.BlockSpec((block_m, LANES), lambda i, kb: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((mp, LANES), jnp.float32),
+            interpret=interpret,
+        )(idx, signs, coef.reshape(1, kp))
     return out[:m]

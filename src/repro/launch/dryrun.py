@@ -319,6 +319,22 @@ def main() -> int:
     if args.out:
         with open(args.out, "a") as f:
             f.write(json.dumps(rec, default=str) + "\n")
+    # mirror the record into the run ledger (REPRO_LEDGER) so sweeps
+    # that thread a ledger through their subprocesses see per-combo rows
+    from repro.obs import default_ledger
+
+    led = default_ledger()
+    led.record(f"launch.dryrun[{args.arch},{args.shape}]", rec)
+    if rec.get("ok") and "collective_breakdown" in rec:
+        led.hlo_event(
+            f"launch.dryrun[{args.arch},{args.shape},{rec.get('mesh')}]",
+            {
+                "collective_bytes_per_device":
+                    rec.get("collective_bytes_per_device"),
+                "collective_breakdown": rec.get("collective_breakdown"),
+                "collective_counts": rec.get("collective_counts"),
+            },
+        )
     return 0 if rec.get("ok") else 1
 
 

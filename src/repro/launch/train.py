@@ -33,6 +33,11 @@ def main() -> None:
     ap.add_argument("--fl-interval", type=int, default=0)
     ap.add_argument("--fl-q", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ledger", default=None, metavar="PATH",
+                    help="JSONL run-ledger path (default: $REPRO_LEDGER)")
+    ap.add_argument("--xprof", default=None, metavar="DIR",
+                    help="profiler capture of the steady-state steps "
+                         "(starts after step 0, so compile is excluded)")
     args = ap.parse_args()
 
     from repro.ckpt import save_checkpoint
@@ -44,7 +49,16 @@ def main() -> None:
     from repro.launch.mesh import make_host_mesh, make_production_mesh
     from repro.launch.steps import make_train_step
     from repro.models import init_params
+    from repro.obs import default_ledger, maybe_trace
     from repro.optim import adamw
+
+    ledger = default_ledger(args.ledger)
+    ledger.run_header(
+        name=f"train[{args.arch}]", entry="launch.train", arch=args.arch,
+        reduced=bool(args.reduced), steps=args.steps, batch=args.batch,
+        seq=args.seq, lr=args.lr, fl_interval=args.fl_interval,
+        fl_q=args.fl_q, seed=args.seed,
+    )
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     mesh = make_host_mesh() if args.reduced else make_production_mesh()
@@ -66,6 +80,8 @@ def main() -> None:
 
     rng = np.random.default_rng(args.seed)
     b, s = args.batch, args.seq
+    import contextlib
+    prof = contextlib.ExitStack()
     t0 = time.time()
     for i in range(args.steps):
         toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
@@ -77,6 +93,12 @@ def main() -> None:
             batch["vis_embeds"] = jnp.asarray(
                 rng.normal(size=(b, cfg.n_vis_tokens, cfg.d_model)), jnp.float32)
         params, opt_state, metrics = step(params, opt_state, batch)
+        if i == 0:
+            jax.block_until_ready(metrics["loss"])
+            ledger.timing("first_step", time.time() - t0,
+                          entry="launch.train", note="includes compile")
+            if args.xprof:  # steady state only: compile is done
+                prof.enter_context(maybe_trace(args.xprof))
         if i % 10 == 0 or i == args.steps - 1:
             print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
@@ -97,6 +119,10 @@ def main() -> None:
             path = save_checkpoint(args.ckpt_dir, i + 1, params,
                                    extra={"loss": float(metrics["loss"])})
             print(f"  saved {path}", flush=True)
+    prof.close()
+    ledger.timing("train_loop", time.time() - t0, entry="launch.train",
+                  steps=args.steps,
+                  final_loss=float(metrics["loss"]))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,25 @@
+"""repro.obs — the fleet telemetry layer.
+
+Three legs, one subsystem (see README.md):
+
+* **in-scan metric taps** (``metrics``): a ``RoundMetrics`` pytree the
+  engine emits as extra ``lax.scan`` ys, gated by a static
+  ``MetricsConfig`` so ``telemetry=off`` lowers to the byte-identical
+  scan;
+* **structured run ledger** (``ledger``): the versioned JSONL sink every
+  entry point writes through — run headers, per-round metric rows,
+  compile/lower/run timings (``timed_phase``), and HLO byte-attribution
+  events — plus ``report`` to render a run summary from a ledger file;
+* **profiler hooks** (``profile``): ``jax.named_scope`` /
+  ``jax.profiler.TraceAnnotation`` wrappers for the hot kernels and an
+  opt-in ``--xprof DIR`` trace capture on the benchmark CLIs.
+"""
+from repro.obs.ledger import (  # noqa: F401
+    LEDGER_SCHEMA_VERSION, Ledger, default_ledger, pytree_hash, read_ledger,
+    timed_phase, validate_event,
+)
+from repro.obs.metrics import (  # noqa: F401
+    METRIC_FIELDS, METRICS_OFF, MetricsConfig, RoundMetrics,
+    decision_metrics, decision_metrics_host, metrics_to_dict,
+)
+from repro.obs.profile import annotate, maybe_trace, scope  # noqa: F401

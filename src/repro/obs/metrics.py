@@ -1,0 +1,181 @@
+"""In-scan metric taps: the ``RoundMetrics`` pytree and its gating config.
+
+The engine's round body computes a :class:`RoundMetrics` per round and
+emits it as extra ``lax.scan`` ys — Lyapunov drift terms, the comp/comm/
+timeout energy split, quantization-level statistics including the
+Theorem-3 pre-integerization value, the realized quantization MSE against
+the unquantized aggregate, timeout counts, the per-round q-vs-dataset-size
+correlation (the paper's Remark 2 diagnostic), and the GA fitness spread
+for compiled-GA policy modes.
+
+Gating contract (regressed by ``tests/test_obs.py``): every metric op is
+behind a *static* Python branch on :class:`MetricsConfig` — with
+``enabled=False`` the engine traces the exact pre-telemetry scan, so the
+lowered HLO is byte-identical and the one-compile contract is untouched.
+Telemetry therefore never costs anything unless switched on, and switching
+it on changes only WHAT the scan outputs, not how many times it compiles.
+
+``decision_metrics`` is pure jnp and shared verbatim by both engines: the
+compiled scan calls it inline (traced), and ``run_host_policy`` calls the
+same function jitted on f32-cast host arrays (``decision_metrics_host``).
+Fields whose inputs match exactly across the two paths — the integer
+schedule, q levels, dataset sizes (q_mean/q_max, corr_q_d, n_timeout) —
+are then bit-for-bit identical. Float fields that depend on the host's
+f64 scalar KKT (energy splits, drift terms) or on wire arithmetic that
+XLA fuses differently inside vs outside the scan (quant_mse past the
+first rounds) agree to ~1e-5, the same tolerance as the engine parity
+suites (tests/test_sim_engine.py::test_scan_equals_host_policy_replay).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsConfig:
+    """Static telemetry gate. Frozen + hashable: it selects a trace, it
+    never rides through one.
+
+    enabled     master switch; False lowers the byte-identical scan.
+    quant_mse   tap ||agg - exact||^2/Z against the unquantized update
+                (one extra (S, Z) contraction per round).
+    ga_fitness  tap best/median population fitness for compiled-GA modes
+                (``ga_best``/``ga_median`` are NaN for other policies).
+    """
+
+    enabled: bool = False
+    quant_mse: bool = True
+    ga_fitness: bool = True
+
+
+METRICS_OFF = MetricsConfig()
+
+
+@dataclasses.dataclass
+class RoundMetrics:
+    """Per-round scalar taps (all f32), stacked to (N,) by the scan."""
+
+    data_term: Any      # eq. 20 drift (lambda1 queue input)
+    quant_term: Any     # eq. 21 drift (lambda2 queue input)
+    energy_comp: Any    # sum of tau_e*alpha*gamma*D_i*f_i^2 over spenders
+    energy_comm: Any    # total energy minus the compute part
+    energy_timeout: Any # energy burned by clients that timed out (a=0)
+    n_timeout: Any      # count of energy>0 & a=0 clients (baseline pathology)
+    q_mean: Any         # mean integer q over scheduled clients
+    q_max: Any          # max integer q this round
+    q_cont_mean: Any    # mean Theorem-3 pre-integerization q (baselines: raw policy level)
+    quant_mse: Any      # ||agg - sum_s w_s theta_s||^2 / Z (NaN if untapped)
+    corr_q_d: Any       # Pearson corr(q_i, D_i) over scheduled (Remark 2; NaN if undefined)
+    ga_best: Any        # final-generation best J0 (NaN for non-GA modes)
+    ga_median: Any      # final-generation median population J0 (NaN likewise)
+
+
+jax.tree_util.register_dataclass(
+    RoundMetrics,
+    data_fields=[f.name for f in dataclasses.fields(RoundMetrics)],
+    meta_fields=[],
+)
+
+METRIC_FIELDS = tuple(f.name for f in dataclasses.fields(RoundMetrics))
+
+_NAN = float("nan")
+
+
+def decision_metrics(
+    a: jax.Array,          # (U,) participation {0,1} int
+    q: jax.Array,          # (U,) integer levels (0 where out)
+    q_cont: jax.Array,     # (U,) continuous pre-integerization q (see FastDecision)
+    f: jax.Array,          # (U,) CPU frequency (0 where no energy spent)
+    energy: jax.Array,     # (U,) per-client round energy
+    d_sizes: jax.Array,    # (U,) dataset sizes
+    data_term: jax.Array,  # scalar
+    quant_term: jax.Array, # scalar
+    sysp,                  # SystemParams (tau_e/alpha/gamma)
+) -> RoundMetrics:
+    """Pure-jnp tap over a FastDecision's arrays -> RoundMetrics with the
+    quant_mse / ga_* slots NaN (the round body fills them from the wire
+    and the search when their sub-taps are on)."""
+    af = (a > 0).astype(jnp.float32)
+    spent = energy > 0.0
+    d32 = d_sizes.astype(jnp.float32)
+
+    comp_i = sysp.tau_e * sysp.alpha * sysp.gamma * d32 * f**2
+    e_comp = jnp.sum(jnp.where(spent, comp_i, 0.0))
+    e_total = jnp.sum(energy)
+    timed_out = spent & (af == 0.0)
+    e_timeout = jnp.sum(jnp.where(timed_out, energy, 0.0))
+    n_timeout = jnp.sum(timed_out.astype(jnp.float32))
+
+    n = jnp.sum(af)
+    n_safe = jnp.maximum(n, 1.0)
+    qf = q.astype(jnp.float32)
+    q_mean = jnp.sum(qf * af) / n_safe
+    q_max = jnp.max(qf)
+    qc_mean = jnp.sum(q_cont.astype(jnp.float32) * af) / n_safe
+
+    # Pearson corr(q, D) over the scheduled set (Remark 2): NaN when the
+    # round has < 2 participants or a degenerate variance.
+    d_mean = jnp.sum(d32 * af) / n_safe
+    dq = (qf - q_mean) * af
+    dd = (d32 - d_mean) * af
+    cov = jnp.sum(dq * dd)
+    var_q, var_d = jnp.sum(dq * dq), jnp.sum(dd * dd)
+    denom = jnp.sqrt(var_q * var_d)
+    corr = jnp.where(
+        (n >= 2.0) & (denom > 0.0), cov / jnp.maximum(denom, 1e-30),
+        jnp.float32(_NAN),
+    )
+
+    nan = jnp.float32(_NAN)
+    return RoundMetrics(
+        data_term=data_term.astype(jnp.float32),
+        quant_term=quant_term.astype(jnp.float32),
+        energy_comp=e_comp, energy_comm=e_total - e_comp,
+        energy_timeout=e_timeout, n_timeout=n_timeout,
+        q_mean=q_mean, q_max=q_max, q_cont_mean=qc_mean,
+        quant_mse=nan, corr_q_d=corr, ga_best=nan, ga_median=nan,
+    )
+
+
+# SystemParams is a frozen (hashable) dataclass of floats — a static jit
+# argument, exactly as it enters the compiled scan as a closed-over const.
+_decision_metrics_jit = jax.jit(decision_metrics, static_argnums=(8,))
+
+
+def decision_metrics_host(
+    a: np.ndarray, q: np.ndarray, q_cont: np.ndarray, f: np.ndarray,
+    energy: np.ndarray, d_sizes: np.ndarray, data_term: float,
+    quant_term: float, sysp,
+    quant_mse: Optional[float] = None,
+    ga_best: Optional[float] = None,
+    ga_median: Optional[float] = None,
+) -> dict:
+    """Host replay of :func:`decision_metrics`: the SAME jitted function on
+    f32-cast arrays, so every field whose inputs are exact across engines
+    (the integer schedule, q, D) comes out bit-for-bit with the scan's tap.
+    Returns a plain dict ready for a ledger ``round`` row."""
+    rm = _decision_metrics_jit(
+        jnp.asarray(a, jnp.int32), jnp.asarray(q, jnp.int32),
+        jnp.asarray(q_cont, jnp.float32), jnp.asarray(f, jnp.float32),
+        jnp.asarray(energy, jnp.float32), jnp.asarray(d_sizes, jnp.float32),
+        jnp.float32(data_term), jnp.float32(quant_term), sysp,
+    )
+    out = metrics_to_dict(rm)
+    if quant_mse is not None:
+        out["quant_mse"] = float(quant_mse)
+    if ga_best is not None:
+        out["ga_best"] = float(ga_best)
+    if ga_median is not None:
+        out["ga_median"] = float(ga_median)
+    return out
+
+
+def metrics_to_dict(rm: RoundMetrics) -> dict:
+    """RoundMetrics (scalars or (N,) stacks) -> {field: numpy value}."""
+    return {name: np.asarray(getattr(rm, name))
+            for name in METRIC_FIELDS}

@@ -1,0 +1,68 @@
+"""Profiler hooks: named scopes for the trace, annotations for the host,
+and the opt-in ``--xprof DIR`` capture the benchmark CLIs share.
+
+``scope`` wraps traced regions (Pallas kernels, the local-SGD vmap, the
+KKT solve) in ``jax.named_scope`` — pure metadata riding the jaxpr's
+source locations, so profiles attribute device time to paper steps.
+Named scopes do NOT change the lowered StableHLO text (locations are
+debug info), which the telemetry-off byte-identity gate in
+``tests/test_obs.py`` relies on.
+
+``annotate`` is the host-side ``jax.profiler.TraceAnnotation`` for
+per-round phases of object-loop runs; it only costs anything while a
+trace is being captured.
+
+``maybe_trace`` gates ``jax.profiler.trace`` on a directory argument so
+CLIs can expose ``--xprof DIR`` without branching: None is a no-op
+context. Capture it around the steady-state region only (after compile),
+so the profile shows round execution, not tracing.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional
+
+import jax
+
+
+def scope(name: str):
+    """Traced-region name for profiles: ``with scope("kkt_solve"): ...``"""
+    return jax.named_scope(name)
+
+
+def annotate(name: str):
+    """Host-side profiler annotation (active only during a capture)."""
+    try:
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:  # noqa: BLE001 — profiling must never fail a run
+        return contextlib.nullcontext()
+
+
+@contextlib.contextmanager
+def maybe_trace(trace_dir: Optional[str]) -> Iterator[None]:
+    """``jax.profiler.trace(dir)`` when a directory is given, else no-op.
+
+    Degrades gracefully (warn, continue) if the profiler backend is
+    unavailable in the container — capturing a profile is never allowed
+    to take the benchmark down with it.
+    """
+    if not trace_dir:
+        yield
+        return
+    try:
+        jax.profiler.start_trace(trace_dir)
+        started = True
+    except Exception as e:  # noqa: BLE001
+        print(f"# xprof capture unavailable ({type(e).__name__}: {e})",
+              flush=True)
+        started = False
+    try:
+        yield
+    finally:
+        if started:
+            try:
+                jax.profiler.stop_trace()
+                print(f"# xprof trace written to {trace_dir}", flush=True)
+            except Exception as e:  # noqa: BLE001
+                print(f"# xprof stop failed ({type(e).__name__}: {e})",
+                      flush=True)

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Optional
 
 import jax
@@ -46,6 +47,9 @@ import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from repro.core.genetic import GAConfig, RoundContext, SystemParams
+from repro.obs import ledger as obs_ledger
+from repro.obs import metrics as obs_metrics
+from repro.obs.metrics import MetricsConfig
 from repro.data.synthetic import (
     SyntheticImageTask, gaussian_sizes, hetero_kl, make_federated_datasets,
     make_test_set,
@@ -95,6 +99,9 @@ class SimResult:
     rates: np.ndarray         # (N, U) assigned uplink rates
     lambda1: np.ndarray       # (N,)
     lambda2: np.ndarray       # (N,)
+    # telemetry taps ({field: (N,) array}, see repro.obs.metrics) — None
+    # unless the sim was built with telemetry enabled
+    metrics: Optional[dict] = None
 
     @property
     def cum_energy(self) -> np.ndarray:
@@ -181,6 +188,8 @@ class FleetSim:
         hetero: Optional[np.ndarray] = None,  # (U,) scheduling multiplier
         scenario: Optional[Scenario] = None,
         name: str = "sim_qccf",
+        telemetry: Optional[MetricsConfig] = None,
+        ledger: Optional[obs_ledger.Ledger] = None,
     ) -> None:
         flat0, unravel = ravel_pytree(init_params)
         self.flat0 = flat0.astype(jnp.float32)
@@ -227,6 +236,12 @@ class FleetSim:
             ga_config = GAConfig(repair_infeasible=True)
         self.ga_config = ga_config
         self.name = name
+        # Telemetry (repro.obs): the STATIC metrics gate selects what the
+        # scan traces (off = byte-identical pre-telemetry program, see
+        # tests/test_obs.py), the ledger is the JSONL sink run_compiled /
+        # run_host_policy write headers + per-round rows through.
+        self.metrics_cfg = obs_metrics.METRICS_OFF if telemetry is None else telemetry
+        self.ledger = ledger if ledger is not None else obs_ledger.Ledger(None)
         self._compiled: dict = {}
 
     # ------------------------------------------------------------ round body
@@ -264,25 +279,44 @@ class FleetSim:
         s_n = sigma_sq / jnp.maximum(jnp.mean(sigma_sq), 1e-12)
         d_sizes = self.fleet.n_samples.astype(jnp.float32)
         mode = self.policy_mode
+        mcfg = self.metrics_cfg
+        # static gate: GA fitness taps only exist in the trace when asked
+        ga_stats = None
+        tap_ga = mcfg.enabled and mcfg.ga_fitness
         if mode == "compiled-ga":
             # Full Algorithm 1 inside the trace: GA over channel assignments
             # with the KKT fitness. The GA key derives from the ROUND key
             # (not k_ch) so greedy-mode streams stay byte-identical to the
             # two-mode engine; run_host_policy mirrors this fold_in.
             k_ga = jax.random.fold_in(key, search.GA_KEY_TAG)
-            dec = search.ga_decide(
-                k_ga, rates, d_sizes, g_n, s_n, theta_max, lam1, lam2, sysp,
-                z, self.v_weight, cfg=self.ga_config, q_cap=self.q_cap,
-                hetero=dyn["hetero"],
-            )
+            if tap_ga:
+                dec, ga_stats = search.ga_decide(
+                    k_ga, rates, d_sizes, g_n, s_n, theta_max, lam1, lam2,
+                    sysp, z, self.v_weight, cfg=self.ga_config,
+                    q_cap=self.q_cap, hetero=dyn["hetero"], with_stats=True,
+                )
+            else:
+                dec = search.ga_decide(
+                    k_ga, rates, d_sizes, g_n, s_n, theta_max, lam1, lam2,
+                    sysp, z, self.v_weight, cfg=self.ga_config,
+                    q_cap=self.q_cap, hetero=dyn["hetero"],
+                )
         elif mode == "same_size":
             # SameSize [26] runs the same GA machinery on a mean-size fake
             # context; same GA key derivation as compiled-ga.
             k_ga = jax.random.fold_in(key, search.GA_KEY_TAG)
-            dec = search.baseline_same_size(
-                k_ga, rates, d_sizes, g_n, s_n, theta_max, lam1, lam2, sysp,
-                z, self.v_weight, cfg=self.ga_config, q_cap=self.q_cap,
-            )
+            if tap_ga:
+                dec, ga_stats = search.baseline_same_size(
+                    k_ga, rates, d_sizes, g_n, s_n, theta_max, lam1, lam2,
+                    sysp, z, self.v_weight, cfg=self.ga_config,
+                    q_cap=self.q_cap, with_stats=True,
+                )
+            else:
+                dec = search.baseline_same_size(
+                    k_ga, rates, d_sizes, g_n, s_n, theta_max, lam1, lam2,
+                    sysp, z, self.v_weight, cfg=self.ga_config,
+                    q_cap=self.q_cap,
+                )
         elif mode == "no_quant":
             dec = fast_policy.baseline_no_quant(
                 rates, d_sizes, g_n, s_n, theta_max, sysp, z, self.q_cap,
@@ -350,6 +384,28 @@ class FleetSim:
             "lambda1": lam1,
             "lambda2": lam2,
         }
+        if mcfg.enabled:
+            # telemetry taps ride the scan as extra ys — every op here is
+            # behind the static gate, so telemetry=off traces the exact
+            # pre-telemetry program (HLO identity, tests/test_obs.py)
+            rm = obs_metrics.decision_metrics(
+                dec.a, dec.q, dec.q_cont, dec.f, dec.energy, d_sizes,
+                dec.data_term, dec.quant_term, sysp,
+            )
+            if mcfg.quant_mse:
+                # realized wire error vs the unquantized eq.-2 aggregate
+                exact = jnp.einsum("s,sz->z", w_slot, flat_s)
+                mse = jnp.sum((agg[: self.z] - exact) ** 2) / self.z
+                rm = dataclasses.replace(
+                    rm, quant_mse=jnp.where(d_n > 0, mse,
+                                            jnp.float32(float("nan"))),
+                )
+            if ga_stats is not None:
+                rm = dataclasses.replace(
+                    rm, ga_best=ga_stats["ga_best"],
+                    ga_median=ga_stats["ga_median"],
+                )
+            out["metrics"] = rm
         return (new_flat, g_sq, sigma_sq, theta_max, lam1, lam2), out
 
     # ---------------------------------------------------------------- runs
@@ -402,9 +458,15 @@ class FleetSim:
         if fn is None:
             fn = self._compiled[with_eval] = self._scan_fn(with_eval)
         keys, ridx = self._scan_xs(n_rounds)
+        t0 = time.perf_counter()
         (flat, *_rest), out = fn(self._dyn, self._init_carry(), keys, ridx)
+        jax.block_until_ready(out["energy"])
+        run_s = time.perf_counter() - t0
         self.final_flat = flat
-        return SimResult(
+        metrics = None
+        if self.metrics_cfg.enabled:
+            metrics = obs_metrics.metrics_to_dict(out["metrics"])
+        res = SimResult(
             name=self.name,
             energy=np.asarray(out["energy"], np.float64),
             accuracy=np.asarray(out["accuracy"], np.float64),
@@ -416,7 +478,45 @@ class FleetSim:
             rates=np.asarray(out["rates"], np.float64),
             lambda1=np.asarray(out["lambda1"], np.float64),
             lambda2=np.asarray(out["lambda2"], np.float64),
+            metrics=metrics,
         )
+        if self.ledger.enabled:
+            self._ledger_header("run_compiled", n_rounds)
+            for n in range(n_rounds):
+                self.ledger.round_row(n, **self._ledger_row(res, n))
+            self.ledger.timing("run", run_s, entry="run_compiled",
+                               rounds=int(n_rounds))
+        return res
+
+    # ------------------------------------------------------------- ledger
+
+    def _ledger_header(self, entry: str, n_rounds: int) -> None:
+        """One self-describing run header per run: scenario fingerprint,
+        fleet shape, policy, telemetry gate (git rev + jax version are
+        stamped by the ledger itself)."""
+        self.ledger.run_header(
+            self.name, entry,
+            scenario_hash=obs_ledger.pytree_hash(self._dyn),
+            policy=self.policy_mode,
+            u=int(self.fleet.n_clients),
+            c=int(self.channel.params.n_channels),
+            z=int(self.z), rounds=int(n_rounds), seed=self.seed,
+            telemetry=self.metrics_cfg.enabled,
+        )
+
+    def _ledger_row(self, res: SimResult, n: int) -> dict:
+        """Round n of a SimResult -> ledger round-row fields (the
+        RoundRecord columns plus the telemetry taps when present)."""
+        row = dict(
+            energy=float(res.energy[n]), accuracy=float(res.accuracy[n]),
+            loss=float(res.loss[n]), n_scheduled=int(res.n_scheduled[n]),
+            latency=float(res.latency[n]),
+            payload_bits=float(res.payload_bits[n]),
+            lambda1=float(res.lambda1[n]), lambda2=float(res.lambda2[n]),
+        )
+        if res.metrics is not None:
+            row.update({k: float(v[n]) for k, v in res.metrics.items()})
+        return row
 
     def make_host_ga_policy(self) -> "search.HostGAPolicy":
         """The host GA controller paired to this sim's constants and
@@ -470,7 +570,12 @@ class FleetSim:
         replays ``_round_body``'s gather -> SGD -> quantize -> aggregate
         exactly, so a host policy mirroring the compiled one reproduces the
         scan bit for bit. All returned observations are per slot.
+
+        With the quant_mse tap on (telemetry), a trailing per-round MSE is
+        returned — the same ops on the same wire values as the scan's tap,
+        so the replayed metric matches the compiled one bit for bit.
         """
+        tap_mse = self.metrics_cfg.enabled and self.metrics_cfg.quant_mse
 
         @jax.jit
         def exec_round(flat, slots, q_slot, w_slot, key):
@@ -493,7 +598,13 @@ class FleetSim:
                 acc, loss = self.eval_fn(new_flat)
             else:
                 acc, loss = jnp.float32(0.0), jnp.float32(0.0)
-            return new_flat, g_obs, s_obs, theta, acc, loss
+            out = (new_flat, g_obs, s_obs, theta, acc, loss)
+            if tap_mse:
+                exact = jnp.einsum("s,sz->z", w_slot, flat_s)
+                mse = jnp.sum((agg[: self.z] - exact) ** 2) / self.z
+                out = out + (jnp.where(jnp.sum(w_slot) > 0, mse,
+                                       jnp.float32(float("nan"))),)
+            return out
 
         return exec_round
 
@@ -518,6 +629,8 @@ class FleetSim:
         if channel == "host":
             assert self.host_channel is not None, "build with a host ChannelModel"
         exec_round = self._exec_fn(with_eval)
+        mcfg = self.metrics_cfg
+        tap_mse = mcfg.enabled and mcfg.quant_mse
         u = self.fleet.n_clients
         d_sizes = self.fleet.d_sizes.astype(np.float64)
         g_sq = np.ones(u)
@@ -526,6 +639,10 @@ class FleetSim:
         keys = jax.random.split(jax.random.PRNGKey(self.seed + 1), n_rounds)
         flat = self.flat0
         records: list[RoundRecord] = []
+        # per-round telemetry rows of this replay (same schema as the
+        # compiled taps; kept for the parity suite and the ledger)
+        host_metrics: list[dict] = []
+        t_run0 = time.perf_counter()
         cum = 0.0
         for n in range(n_rounds):
             if channel == "sim":
@@ -545,6 +662,10 @@ class FleetSim:
                 # same per-round GA key derivation as the compiled-ga scan
                 policy.set_round_key(jax.random.fold_in(keys[n], search.GA_KEY_TAG))
             dec = policy.decide(ctx)
+            # continuous-q tap: KKT-backed policies attach the clipped
+            # q_hat; baselines fall back to their raw pre-clamp level
+            q_cont_host = getattr(dec, "q_cont",
+                                  np.asarray(dec.q, np.float64).copy())
             # clamp into the wire format: a uint8/uint16 index plane sized
             # for q_cap would silently wrap above it
             q_exec = np.clip(dec.q, 1, self.q_cap) * dec.a
@@ -572,10 +693,16 @@ class FleetSim:
                 f"{sched_from_slots.tolist()} — every scheduled client "
                 "must hold exactly one channel (see policy.compact_slots)"
             )
-            d_slot = np.where(mask, d_sizes[cids], 0.0)
-            w_slot = d_slot / max(float(d_slot.sum()), 1e-12)
+            # eq.-2 weights in f32, the scan's own arithmetic: sizes are
+            # small integers (f32-exact sums), so the f32 division lands on
+            # the identical IEEE result — the replayed wire (and the
+            # quant_mse tap) stays bit-for-bit the compiled one, with no
+            # f64-then-cast double rounding.
+            d_slot = np.where(mask, d_sizes[cids], 0.0).astype(np.float32)
+            w_slot = d_slot / np.maximum(d_slot.sum(dtype=np.float32),
+                                         np.float32(1e-12))
             q_slot = np.where(mask, q_exec[cids], 0)
-            flat, g_obs, s_obs, theta, acc, loss = exec_round(
+            flat, g_obs, s_obs, theta, acc, loss, *mse_tap = exec_round(
                 flat, jnp.asarray(slots, jnp.int32),
                 jnp.asarray(q_slot, jnp.int32),
                 jnp.asarray(w_slot, jnp.float32), keys[n],
@@ -602,8 +729,36 @@ class FleetSim:
                              + self.z + 32.0, 0.0))),
                 rates=v_assigned,
             ))
+            if mcfg.enabled:
+                # same-schema replay of the scan's tap: the SAME jitted
+                # decision_metrics on the host decision's arrays (see
+                # repro.obs.metrics for which fields are exact vs analog);
+                # the host loop has no per-generation GA median.
+                host_metrics.append(obs_metrics.decision_metrics_host(
+                    a_np, np.asarray(dec.q), np.asarray(q_cont_host),
+                    np.asarray(dec.f), np.asarray(dec.energy), d_sizes,
+                    float(dec.data_term), float(dec.quant_term), self.sysp,
+                    quant_mse=float(mse_tap[0]) if tap_mse else None,
+                    ga_best=getattr(dec, "ga_best", None),
+                ))
         self.final_flat = flat
-        return ExperimentResult(getattr(policy, "name", "host_policy"), records)
+        self.last_host_metrics = host_metrics if mcfg.enabled else None
+        run_s = time.perf_counter() - t_run0
+        result = ExperimentResult(getattr(policy, "name", "host_policy"), records)
+        if self.ledger.enabled:
+            self._ledger_header("run_host_policy", n_rounds)
+            for n, rec in enumerate(records):
+                row = dict(
+                    energy=rec.energy, accuracy=rec.accuracy, loss=rec.loss,
+                    n_scheduled=rec.n_scheduled, latency=rec.latency,
+                    payload_bits=rec.payload_bits,
+                )
+                if mcfg.enabled:
+                    row.update(host_metrics[n])
+                self.ledger.round_row(n, **row)
+            self.ledger.timing("run", run_s, entry="run_host_policy",
+                               rounds=int(n_rounds))
+        return result
 
     # -------------------------------------------------------------- sharding
 
@@ -650,6 +805,8 @@ def build_sim(
     ga_config: Optional[GAConfig] = None,
     hetero_weight: Optional[float] = None,
     name: Optional[str] = None,
+    telemetry: Optional[MetricsConfig] = None,
+    ledger: Optional[obs_ledger.Ledger] = None,
 ) -> FleetSim:
     """Mirror of ``repro.fl.experiment.build_experiment`` for the compiled
     engine: same task specs, same dataset/draw seeds, same client drop, and
@@ -752,4 +909,5 @@ def build_sim(
         block_m=block_m, seed=seed, host_channel=host_channel,
         policy_mode=policy_mode, ga_config=ga_config,
         hetero=hetero, scenario=scenario, name=name,
+        telemetry=telemetry, ledger=ledger,
     )

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fl.client import sgd_scan_body
+from repro.obs.profile import scope as _profile_scope
 
 Pytree = Any
 
@@ -133,7 +134,8 @@ def fleet_local_sgd(
         return p, gsq_acc / tau, jnp.var(gsqs)
 
     keys = jax.random.split(key, u)
-    return jax.vmap(one_client)(fleet_x, fleet_y, n_samples, keys)
+    with _profile_scope("fleet_local_sgd"):
+        return jax.vmap(one_client)(fleet_x, fleet_y, n_samples, keys)
 
 
 def ema_update(

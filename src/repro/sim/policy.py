@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import bounds, kkt
 from repro.core.genetic import SystemParams
+from repro.obs.profile import scope as _profile_scope
 
 LN2 = math.log(2.0)
 RANGE_BITS = 32.0
@@ -100,6 +101,9 @@ class FastDecision:
     data_term: Any     # scalar
     quant_term: Any    # scalar
     payload_bits: Any  # scalar
+    q_cont: Any        # (U,) continuous pre-integerization q (telemetry tap):
+    #                    the Theorem-3 clipped q_hat for KKT policies, the raw
+    #                    policy level for baselines; meaningful only where a > 0.
 
 
 # All-array dataclass; registering it as a pytree lets compiled decision
@@ -196,13 +200,15 @@ def solve_kkt(
     v_weight: float,
     q_cap: int = 8,
     grid_n: int = 512,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Vectorized eq. 41/42: returns (q int, f, feasible) per client.
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Vectorized eq. 41/42: returns (q int, f, feasible, q_cont) per client.
 
     Walks the same 5 mutually exclusive KKT cases as
     ``repro.core.kkt.solve_continuous`` in its priority order (1, 2, 4, 3,
     5, grid fallback), then Theorem-3 floor/ceil integerization clamped to
-    ``q_cap``. Everything is elementwise over U.
+    ``q_cap``. ``q_cont`` is the continuous clipped q_hat the
+    integerization started from (the telemetry tap behind
+    ``RoundMetrics.q_cont_mean``). Everything is elementwise over U.
     """
     p, V = sysp.p_tx, v_weight
     L = sysp.lipschitz
@@ -303,7 +309,7 @@ def solve_kkt(
     q_int = jnp.where(take_hi, q_hi, q_lo)
     f_int = jnp.where(take_hi, f_hi, f_lo)
     feasible = feasible & jnp.isfinite(jnp.where(take_hi, j_hi, j_lo))
-    return q_int.astype(jnp.int32), f_int, feasible
+    return q_int.astype(jnp.int32), f_int, feasible, q_hat
 
 
 # --------------------------------------------------------- bound terms
@@ -375,10 +381,11 @@ def finish_decision(
     w_round = jnp.where(a, af * d_sizes / jnp.maximum(d_n, 1e-12), 0.0)
     w_full = d_sizes / jnp.sum(d_sizes)
 
-    q_int, f_int, feas = solve_kkt(
-        v_assigned, w_round, d_sizes, theta_max, lam2, sysp, z, v_weight,
-        q_cap=q_cap,
-    )
+    with _profile_scope("kkt_solve"):
+        q_int, f_int, feas, q_hat = solve_kkt(
+            v_assigned, w_round, d_sizes, theta_max, lam2, sysp, z, v_weight,
+            q_cap=q_cap,
+        )
     # feas == a's gate except in float corner cases; fold it in so q/f/energy
     # stay consistent (w_round keeps the pre-solve participation, as the
     # host repair loop would only re-weight on an actual drop).
@@ -409,6 +416,7 @@ def finish_decision(
         a=a.astype(jnp.int32), q=q, f=f,
         v_assigned=jnp.where(a, v_assigned, 0.0), energy=energy,
         latency=latency, data_term=dt, quant_term=qt, payload_bits=payload,
+        q_cont=q_hat,
     )
 
 
@@ -464,11 +472,16 @@ class HostFastPolicy:
             self.lambda2, self.sysp, ctx.z, self.v_weight, q_cap=self.q_cap,
             hetero=self.hetero,
         )
-        return Decision(
+        dec = Decision(
             assign=fd.assign, a=fd.a, q=fd.q, f=fd.f, energy=fd.energy,
             latency=fd.latency, j0=0.0, data_term=float(fd.data_term),
             quant_term=float(fd.quant_term), feasible=True,
         )
+        # telemetry tap: the scalar solver's clipped q_hat, so host replays
+        # record the same q_cont_mean the compiled scan taps (Decision is a
+        # plain dataclass; the attribute rides along for run_host_policy).
+        dec.q_cont = fd.q_cont
+        return dec
 
     def commit(self, dec) -> None:
         self.lambda1 = max(self.lambda1 + dec.data_term - self.eps1, 0.0)
@@ -520,13 +533,15 @@ def finish_host(
     f = np.zeros(u)
     energy = np.zeros(u)
     latency = np.zeros(u)
+    q_cont = np.zeros(u)
     for i in range(u):
         if not a[i]:
             continue
         env = env_for(i, w_round[i])
         q_hat, _f_hat, case = kkt.solve_continuous(env)
         assert case != -1, "feasibility pre-filtered above"
-        dec = kkt.integerize(env, float(np.clip(q_hat, 1.0, q_cap)))
+        q_cont[i] = float(np.clip(q_hat, 1.0, q_cap))
+        dec = kkt.integerize(env, q_cont[i])
         assert dec is not None
         q[i], f[i] = dec.q, dec.f
         energy[i] = dec.energy
@@ -543,6 +558,7 @@ def finish_host(
         a=a.astype(np.int64), q=q, f=f,
         v_assigned=np.where(a, v_assigned, 0.0), energy=energy,
         latency=latency, data_term=dt, quant_term=qt, payload_bits=payload,
+        q_cont=q_cont,
     )
 
 
@@ -648,6 +664,7 @@ def account_baseline(
         a=a.astype(jnp.int32), q=q_wire, f=jnp.where(a0, f, 0.0),
         v_assigned=jnp.where(a0, v_assigned, 0.0), energy=energy,
         latency=latency, data_term=dt, quant_term=qt, payload_bits=payload,
+        q_cont=q_raw,
     )
 
 

@@ -203,6 +203,7 @@ def ga_decide(
     cfg: GAConfig = GAConfig(),
     q_cap: int = 8,
     hetero=None,
+    with_stats: bool = False,
 ) -> fast_policy.FastDecision:
     """Algorithm 1, fully traced: GA over assignments + KKT fitness.
 
@@ -215,6 +216,12 @@ def ga_decide(
     ``finish_decision``), so GA-mode rounds feed the engine's compacted
     round body exactly like the greedy fast path — an all-infeasible
     search yields all ``-1`` slots and the round trains nothing real.
+
+    ``with_stats=True`` (a static telemetry gate, see ``repro.obs``)
+    additionally returns ``{"ga_best", "ga_median"}``: the running best J0
+    and the final generation's median population J0 — the search-quality
+    taps behind ``RoundMetrics.ga_best``/``ga_median``. The default False
+    traces the exact stat-free program.
     """
     u, c = rates.shape
     assert c >= 2, "population search needs at least two channels"
@@ -235,7 +242,8 @@ def ga_decide(
         best_assign = jnp.where(better, pop[i_star], best_assign)
         best_j0 = jnp.where(better, j0[i_star], best_j0)
         pop = next_generation(kg, pop, j0, cfg, u)
-        return (pop, best_assign, best_j0), best_j0
+        ys = (best_j0, jnp.median(j0)) if with_stats else best_j0
+        return (pop, best_assign, best_j0), ys
 
     init = (pop0, jnp.full((c,), -1, jnp.int32), jnp.float32(J0_INFEASIBLE))
     (_pop, best_assign, _best_j0), _trace = jax.lax.scan(gen_body, init, gen_keys)
@@ -243,10 +251,14 @@ def ga_decide(
     # Re-evaluate the winner (deterministic) to materialize the full record;
     # an all-infeasible search leaves best_assign empty == schedule nobody.
     v_assigned, a0 = fast_policy.participation_from_assign(best_assign, rates)
-    return fast_policy.finish_decision(
+    fd = fast_policy.finish_decision(
         best_assign, v_assigned, a0, d_sizes, g_sq, sigma_sq, theta_max,
         lam2, sysp, z, v_weight, q_cap=q_cap, hetero=hetero,
     )
+    if with_stats:
+        best_trace, median_trace = _trace
+        return fd, {"ga_best": best_trace[-1], "ga_median": median_trace[-1]}
+    return fd
 
 
 # ------------------------------------------------- compiled SameSize [26]
@@ -265,6 +277,7 @@ def baseline_same_size(
     v_weight: float,
     cfg: GAConfig = GAConfig(),
     q_cap: int = 8,
+    with_stats: bool = False,
 ) -> fast_policy.FastDecision:
     """Traced ``fl.baselines.SameSizePolicy``: run the full GA+KKT search
     pretending every client holds the MEAN dataset size, then re-account
@@ -277,10 +290,17 @@ def baseline_same_size(
     :class:`HostGAPolicy` controller (it forwards ``set_round_key``).
     """
     fake_d = jnp.full_like(d_sizes, jnp.mean(d_sizes))
-    fd = ga_decide(
-        key, rates, fake_d, g_sq, sigma_sq, theta_max, lam1, lam2, sysp, z,
-        v_weight, cfg=cfg, q_cap=q_cap,
-    )
+    ga_stats = None
+    if with_stats:
+        fd, ga_stats = ga_decide(
+            key, rates, fake_d, g_sq, sigma_sq, theta_max, lam1, lam2, sysp,
+            z, v_weight, cfg=cfg, q_cap=q_cap, with_stats=True,
+        )
+    else:
+        fd = ga_decide(
+            key, rates, fake_d, g_sq, sigma_sq, theta_max, lam1, lam2, sysp,
+            z, v_weight, cfg=cfg, q_cap=q_cap,
+        )
     q_raw = fd.q.astype(jnp.float32)
     f0 = jnp.where(fd.f > 0, fd.f, sysp.f_min)
     first = fast_policy.account_baseline(
@@ -290,10 +310,13 @@ def baseline_same_size(
     # the host escalation loop raises one f at a time but each client's
     # latency only depends on its own f, so one vectorized pass is exact
     f2 = jnp.where(first.latency > sysp.t_max, sysp.f_max, f0)
-    return fast_policy.account_baseline(
+    final = fast_policy.account_baseline(
         fd.assign, rates, d_sizes, g_sq, sigma_sq, theta_max, q_raw, f2,
         sysp, z, q_cap, drop_late=True, late_tol=1.0 + 1e-9,
     )
+    if with_stats:
+        return final, ga_stats
+    return final
 
 
 # ------------------------------------------------------------- host oracle
@@ -433,13 +456,20 @@ class HostGAPolicy:
             self.sysp, ctx.z, self.v_weight, cfg=self.cfg, q_cap=self.q_cap,
             hetero=self.hetero,
         )
-        return Decision(
+        dec = Decision(
             assign=fd.assign, a=fd.a, q=fd.q, f=fd.f, energy=fd.energy,
             latency=fd.latency,
             j0=_j0_host(fd, self.lambda1, self.lambda2, self.v_weight),
             data_term=float(fd.data_term), quant_term=float(fd.quant_term),
             feasible=True,
         )
+        # telemetry taps for run_host_policy's ledger rows (plain-dataclass
+        # attributes, like HostFastPolicy): the scalar solver's clipped
+        # q_hat, and the search's best J0 (ga_best; the host loop does not
+        # track the per-generation population median).
+        dec.q_cont = fd.q_cont
+        dec.ga_best = dec.j0
+        return dec
 
     def commit(self, dec) -> None:
         self.lambda1 = max(self.lambda1 + dec.data_term - self.eps1, 0.0)

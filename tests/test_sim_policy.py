@@ -42,7 +42,7 @@ def test_solve_kkt_matches_scalar_solver(z, lam2, vw):
     w = rng.uniform(0.02, 0.3, n)
     d = rng.uniform(100, 3000, n)
     th = rng.uniform(0.01, 3.0, n)
-    qj, fj, feasj = policy.solve_kkt(
+    qj, fj, feasj, _qhatj = policy.solve_kkt(
         jnp.asarray(v, jnp.float32), jnp.asarray(w, jnp.float32),
         jnp.asarray(d, jnp.float32), jnp.asarray(th, jnp.float32),
         jnp.float32(lam2), SYSP, z, vw, q_cap=8,
