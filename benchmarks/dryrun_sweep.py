@@ -97,10 +97,12 @@ def run_combo(arch: str, shape: str, mesh: str, out: str,
     }
 
 
-def run_wire_ratio(arch: str, out: str, timeout: int = 3600) -> dict:
+def run_wire_ratio(arch: str, out: str, timeout: int = 3600,
+                   downlink: str = "off") -> dict:
     cmd = [
         sys.executable, "-m", "repro.launch.dryrun",
-        "--arch", arch, "--shape", "train_512", "--wire-ratio", "--out", out,
+        "--arch", arch, "--shape", "train_512", "--wire-ratio",
+        "--downlink", downlink, "--out", out,
     ]
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
     t0 = time.time()
@@ -135,6 +137,13 @@ def main() -> int:
     ap.add_argument("--wire-ratio", action="store_true",
                     help="per-arch fl-round inter-pod wire-ratio sweep "
                          "instead of the lower+compile matrix")
+    ap.add_argument("--downlink", default="off",
+                    choices=("off", "quant", "delta"),
+                    help="broadcast mode threaded into the wire-ratio "
+                         "rounds (both lowered wire modes)")
+    ap.add_argument("--max-ratio", type=float, default=None,
+                    help="fail the wire-ratio sweep if any arch's "
+                         "inter-pod ratio is >= this bound (CI gate)")
     ap.add_argument("--out", default=os.path.join(ROOT, "benchmarks", "results", "dryrun.jsonl"))
     ap.add_argument("--wire-out", default=os.path.join(
         ROOT, "benchmarks", "results", "wire_ratio.jsonl"))
@@ -150,11 +159,16 @@ def main() -> int:
         print(f"wire-ratio sweep: {len(args.arch)} archs -> {args.wire_out}",
               flush=True)
         led.run_header(name="dryrun_sweep[wire_ratio]", entry="dryrun_sweep",
-                       n_archs=len(args.arch))
+                       n_archs=len(args.arch), downlink=args.downlink)
         n_ok = 0
+        over = []
         for i, a in enumerate(args.arch):
-            r = run_wire_ratio(a, args.wire_out, timeout=args.timeout)
+            r = run_wire_ratio(a, args.wire_out, timeout=args.timeout,
+                               downlink=args.downlink)
             n_ok += r["ok"]
+            if (args.max_ratio is not None
+                    and (r["ratio"] is None or r["ratio"] >= args.max_ratio)):
+                over.append((a, r["ratio"]))
             led.record("wire_ratio_sweep", r)
             print(
                 f"[{i+1}/{len(args.arch)}] {a} ok={r['ok']} "
@@ -162,7 +176,10 @@ def main() -> int:
                 flush=True,
             )
         print(f"done: {n_ok}/{len(args.arch)} ok", flush=True)
-        return 0 if n_ok == len(args.arch) else 1
+        if over:
+            print(f"wire-ratio gate FAILED (>= {args.max_ratio}): {over}",
+                  flush=True)
+        return 0 if n_ok == len(args.arch) and not over else 1
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     meshes = {

@@ -38,10 +38,11 @@ cfg = get_config("llama3_8b")
 mesh = make_production_mesh(multi_pod=True)
 pods = pod_partition_map(mesh)
 shape = InputShape("train_small", 512, 64, "train")
-out = {}
+downlink = os.environ.get("BENCH_DOWNLINK", "off")
+out = {"downlink": downlink}
 for packed in (False, True):
-    hlo = steps.lower_fl_round(cfg, mesh, shape,
-                               wire_packed=packed).compile().as_text()
+    hlo = steps.lower_fl_round(cfg, mesh, shape, wire_packed=packed,
+                               downlink=downlink).compile().as_text()
     r = inter_axis_bytes(hlo, pods)
     mode = "packed" if packed else "fp32"
     out[mode] = r["inter_bytes"]
@@ -50,7 +51,7 @@ print("WIRE_RATIO " + json.dumps(out))
 """
 
 
-def bench_wire_ratio(timeout: int = 1800) -> list[tuple]:
+def bench_wire_ratio(timeout: int = 1800, downlink: str = "quant") -> list[tuple]:
     """ROADMAP pod-scale item (first half): lower the federated round on
     the 2x16x16 mesh in both wire modes and record the inter-pod byte
     ratio (uint8 wire / fp32 payload) via ``inter_axis_bytes``. Runs in a
@@ -58,12 +59,17 @@ def bench_wire_ratio(timeout: int = 1800) -> list[tuple]:
     Asserts the packed wire stays under 0.3x — the paper's
     ``(Zq + Z + 32)``-bit format at q <= 8 with bit-packed signs is
     analytically ~0.28x of fp32.
+
+    ``downlink`` ('off'/'quant'/'delta') threads the broadcast leg into
+    both lowered rounds, so the gate holds for the full round-trip wire
+    discipline (default 'quant', matching the CI leg).
     """
     import json as _json
     import subprocess
 
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"),
+               BENCH_DOWNLINK=downlink)
     env.pop("XLA_FLAGS", None)
     try:
         proc = subprocess.run(
@@ -93,7 +99,7 @@ def bench_wire_ratio(timeout: int = 1800) -> list[tuple]:
         f"(packed={res['packed']:.0f}B fp32={res['fp32']:.0f}B)"
     )
     return [(
-        "flround_wire_ratio[llama3_8b,2x16x16]", 0.0,
+        f"flround_wire_ratio[llama3_8b,2x16x16,downlink={downlink}]", 0.0,
         f"inter_pod_ratio={ratio:.4f};u8_bytes={res['packed']:.0f}"
         f";fp32_bytes={res['fp32']:.0f};assert=lt0.3",
     )]

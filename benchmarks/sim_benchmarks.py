@@ -68,6 +68,7 @@ def bench_fleet_scale(
     telemetry: bool = False,
     ledger=None,
     xprof: str | None = None,
+    downlink: str = "off",
 ) -> list[tuple]:
     """U-client QCCF rounds in one compiled scan; rows are run.py-style CSV.
 
@@ -98,6 +99,8 @@ def bench_fleet_scale(
     c = u if n_channels is None else int(n_channels)
     scen = scenario or "single_bs"
     tag = f"U={u},C={c},{task},{scen},{policy}"
+    if downlink != "off":
+        tag += f",dl={downlink}"
     led = ledger if ledger is not None else default_ledger()
     tele = MetricsConfig(enabled=True) if telemetry else None
     rows = []
@@ -106,11 +109,12 @@ def bench_fleet_scale(
             task, scenario=scenario, n_clients=u, n_channels=c, mu=mu,
             beta=beta, seed=seed, batch_size=batch_size, n_test=256,
             policy_mode=policy_mode, ga_config=ga_config, telemetry=tele,
+            downlink=downlink,
         )
     led.run_header(
         name=f"sim_fleet[{tag}]", entry="bench_fleet_scale",
         policy=policy_mode, scenario=scen, u=u, c=c, rounds=n_rounds,
-        seed=seed, telemetry=bool(telemetry),
+        seed=seed, telemetry=bool(telemetry), downlink=downlink,
     )
     rows.append((
         f"sim_build[{tag}]", t_build.seconds * 1e6,
@@ -168,7 +172,7 @@ def bench_fleet_scale(
             "name": f"sim_fleet[{tag},rounds={n_rounds}]",
             "engine": "active-set-compaction",
             "u": u, "c": c, "rounds": n_rounds, "policy": policy_mode,
-            "scenario": scen,
+            "scenario": scen, "downlink": downlink,
             "aggregator": "pallas-tiled",
             "rounds_per_s": round(n_rounds / run_s, 5),
             "compile_s": round(t_compile.seconds, 3),
@@ -177,6 +181,14 @@ def bench_fleet_scale(
             "mean_sched": round(float(n_sched.mean()), 2),
             "mean_q": round(mean_q, 3),
         })
+        if with_eval:
+            # trajectory fields for the downlink-on vs -off parity check
+            json_rows[-1]["final_acc"] = round(
+                float(np.asarray(out["accuracy"])[-1]), 5)
+            json_rows[-1]["final_loss"] = round(
+                float(np.asarray(out["loss"])[-1]), 5)
+            json_rows[-1]["cum_energy_J"] = round(
+                float(np.asarray(out["energy"]).sum()), 6)
     return rows
 
 
@@ -350,6 +362,10 @@ def main() -> None:
     ap.add_argument("--xprof", default=None, metavar="DIR",
                     help="capture a profiler trace of the steady-state "
                          "rounds into DIR")
+    ap.add_argument("--downlink", default="off",
+                    choices=("off", "quant", "delta"),
+                    help="quantized server->client broadcast mode for the "
+                         "scaling bench (BENCH_sim downlink-on rows)")
     args = ap.parse_args()
     from repro.obs import default_ledger
     ledger = default_ledger(args.ledger)
@@ -376,6 +392,7 @@ def main() -> None:
             ga_generations=args.ga_generations,
             ga_population=args.ga_population, json_rows=json_rows,
             telemetry=args.telemetry, ledger=ledger, xprof=args.xprof,
+            downlink=args.downlink,
         )
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)

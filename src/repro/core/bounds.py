@@ -92,3 +92,24 @@ def quant_term(
     levels = np.maximum(2.0 ** np.asarray(q, dtype=np.float64) - 1.0, 1e-12)
     per_client = z * np.asarray(theta_max, np.float64) ** 2 / (4.0 * levels**2)
     return float(consts.lipschitz / 2.0 * np.sum(np.asarray(w_round) * per_client))
+
+
+def downlink_term(
+    consts: BoundConstants,
+    z: int,
+    theta: float,   # broadcast range: max |target| of the downlink payload
+    q: int,         # downlink quantization level
+) -> float:
+    """Per-round contribution of a quantized server->client broadcast to C7:
+    L/2 * Z theta^2 / (4 (2^q - 1)^2).
+
+    The broadcast error is common to every client (the round weights sum to
+    one), so unlike :func:`quant_term` there is no per-client ``w_round``
+    sum — one Lemma-1 variance bound at the broadcast range/level. The
+    engine feeds the *previous* round's realized term into the current
+    decision (the error a client trains on this round was injected by last
+    round's broadcast).
+    """
+    levels = max(2.0 ** float(q) - 1.0, 1e-12)
+    return float(consts.lipschitz / 2.0 * z * float(theta) ** 2
+                 / (4.0 * levels**2))

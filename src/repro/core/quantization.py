@@ -94,7 +94,15 @@ def quantize_indices(
 
     The index fits in ``q_bits`` bits; we store it in the smallest uint dtype
     that holds the *static* maximum level (uint8 for q<=8, else uint16).
+    Levels beyond 16 bits would overflow the uint16 index plane, so a static
+    ``q_bits > 16`` raises instead of silently wrapping the magnitude index.
     """
+    static_q = static_q_bits(q_bits)
+    if static_q is not None and static_q > 16:
+        raise ValueError(
+            f"quantize_indices: q_bits={static_q} does not fit the uint16 "
+            "wire index plane (max level 2^q - 1 needs q <= 16 bits)"
+        )
     x = jnp.asarray(x)
     levels = 2.0 ** jnp.asarray(q_bits, jnp.float32) - 1.0
     theta_max = jnp.max(jnp.abs(x)).astype(jnp.float32)
@@ -104,7 +112,6 @@ def quantize_indices(
     frac = scaled - lower
     u = jax.random.uniform(key, x.shape, jnp.float32)
     idx = lower + (u < frac).astype(jnp.float32)
-    static_q = static_q_bits(q_bits)
     # Traced level: a single compiled step serves any q, so size the index
     # plane for the worst case (q <= 16).
     dtype = jnp.uint8 if static_q is not None and static_q <= 8 else jnp.uint16

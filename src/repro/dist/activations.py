@@ -33,6 +33,8 @@ Patterns:  ``bt``   (B, T)             — token ids, seq-sharded before
            ``bsf``  (B, S, F)          — SwiGLU hidden on ``model``
            ``h2``   (B, S, H, ...)     — head axis at index 2
            ``h3``   (B, S, ?, H, ...)  — head axis at index 3
+           ``bse``  (B, S, E)          — MoE router plane, E replicated
+                                          (top-k runs on local experts)
            ``bsec`` (B, S, E, C)       — MoE dispatch mask, seq-sharded
            ``becd`` (B, E, C, D)       — expert-parallel compute layout
            ``becd_cap`` (B, E, C, D)   — capacity-sharded a2a staging
@@ -60,6 +62,7 @@ _PATTERN_DIMS = {
     "bsf": ("act_batch", "seq", "mlp"),
     "h2": ("act_batch", "seq", "heads"),
     "h3": ("act_batch", "seq", None, "heads"),
+    "bse": ("act_batch", "seq", None),
     "bsec": ("act_batch", "seq", None, None),
     "becd": ("act_batch", "expert", None, None),
     "becd_cap": ("act_batch", None, "moe_capacity", None),

@@ -30,11 +30,13 @@ Contract (consumed by ``launch/dryrun.py`` and the benchmarks):
 
   ``inter_axis_bytes(hlo, device_axis) -> {"inter_bytes", "intra_bytes",
       "unattributed_bytes", "inter_ops", "inter_by_kind",
-      "intra_by_kind"}`` — the weighted bytes split by whether a
-  collective's replica groups cross a device partition (e.g. pods), for
-  inter-pod wire accounting on multi-pod meshes; the per-kind dicts
-  attribute each collective kind (notably the MoE dispatch
-  ``all-to-all``) to the inter/intra side separately.
+      "intra_by_kind", "inter_by_dtype"}`` — the weighted bytes split by
+  whether a collective's replica groups cross a device partition (e.g.
+  pods), for inter-pod wire accounting on multi-pod meshes; the per-kind
+  dicts attribute each collective kind (notably the MoE dispatch
+  ``all-to-all``) to the inter/intra side separately, and
+  ``inter_by_dtype`` feeds :func:`wire_payload_split` (quantized wire
+  planes vs dense float traffic).
 
   ``full_length_intermediates(hlo, length) -> [{"op", "shape", "bytes",
       "comp"}]`` — large per-device tensors that still carry a
@@ -141,6 +143,23 @@ def _result_bytes(line: str, op_end: int, *, is_start: bool = False) -> int:
     if not sizes:
         return 0
     return max(sizes) if is_start else sum(sizes)
+
+
+def _result_dtype(line: str, op_end: int) -> str:
+    """Dtype of the largest result shape (the payload that actually rides
+    the link) — '?' when the line carries no parseable shape."""
+    eq = line.find("=")
+    seg = line[eq + 1 : op_end] if eq >= 0 else line[:op_end]
+    best, best_bytes = "?", -1
+    for m in _SHAPE_RE.finditer(seg):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        nbytes = n * _dtype_nbytes(m.group(1))
+        if nbytes > best_bytes:
+            best, best_bytes = m.group(1), nbytes
+    return best
 
 
 def _group_size(line: str, default_group: int = 1) -> int:
@@ -360,6 +379,7 @@ def inter_axis_bytes(hlo_text: str, device_axis) -> dict:
     inter = intra = unattributed = 0.0
     inter_by_kind: dict[str, float] = {}
     intra_by_kind: dict[str, float] = {}
+    inter_by_dtype: dict[str, float] = {}
     inter_ops: list[dict] = []
     for comp, kind, nbytes, label, line in _collective_ops(comps, default_n):
         weighted = nbytes * mults.get(comp, 1)
@@ -375,9 +395,12 @@ def inter_axis_bytes(hlo_text: str, device_axis) -> dict:
             continue
         crosses = any(len(b) > 1 for b in blocks)
         if crosses:
+            dtype = _result_dtype(line, _COLL_RE.search(line).start())
             inter += weighted
             inter_by_kind[kind] = inter_by_kind.get(kind, 0.0) + weighted
-            inter_ops.append({"bytes": weighted, "kind": kind, "op": label})
+            inter_by_dtype[dtype] = inter_by_dtype.get(dtype, 0.0) + weighted
+            inter_ops.append({"bytes": weighted, "kind": kind, "op": label,
+                              "dtype": dtype})
         else:
             intra += weighted
             intra_by_kind[kind] = intra_by_kind.get(kind, 0.0) + weighted
@@ -388,7 +411,36 @@ def inter_axis_bytes(hlo_text: str, device_axis) -> dict:
         "unattributed_bytes": unattributed,
         "inter_by_kind": inter_by_kind,
         "intra_by_kind": intra_by_kind,
+        "inter_by_dtype": inter_by_dtype,
         "inter_ops": inter_ops[:TOP_OPS],
+    }
+
+
+# Dtype classes for wire-direction attribution: the packed uplink payload
+# crosses the pod links as u8/u16 index planes and sign bitmaps; dense
+# f32/bf16 crossings are either the unpacked fp32 wire mode or training
+# traffic that leaked across pods (e.g. a rematerializing custom-call).
+WIRE_DTYPES = frozenset({"u8", "s8", "u16", "s16", "pred"})
+
+
+def wire_payload_split(inter: dict) -> dict:
+    """Attribute :func:`inter_axis_bytes` crossings to the quantized wire
+    vs dense float traffic, by payload dtype.
+
+    Returns ``{"wire_bytes", "dense_bytes", "wire_frac"}`` — consumed by
+    the dry-run wire-ratio records: in packed mode ~all inter-pod bytes
+    should be in the wire bucket, and a growing dense bucket is the
+    regression signature of an op (like a TopK custom-call's SPMD
+    rematerialization) re-gathering fp32 activations across pods.
+    """
+    by_dtype = inter.get("inter_by_dtype", {})
+    wire = sum(v for k, v in by_dtype.items() if k in WIRE_DTYPES)
+    dense = sum(v for k, v in by_dtype.items() if k not in WIRE_DTYPES)
+    total = wire + dense
+    return {
+        "wire_bytes": wire,
+        "dense_bytes": dense,
+        "wire_frac": wire / total if total > 0 else 0.0,
     }
 
 

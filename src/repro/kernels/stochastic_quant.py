@@ -51,6 +51,14 @@ def quantize(
     *, interpret: bool = True, block_m: int = BLOCK_M,
 ) -> tuple[jax.Array, jax.Array]:
     """x, rbits: (M, 128); scale: () fp32. Returns (idx u8, signs u8)."""
+    # same wire-format bound as core.quantization.quantize_indices: the u8
+    # index plane holds levels up to 2^8 - 1, a larger static q would
+    # silently wrap the magnitude index
+    if not 1 <= int(q_bits) <= 8:
+        raise ValueError(
+            f"quantize: q_bits={q_bits} does not fit the uint8 index plane "
+            "(max level 2^q - 1 needs 1 <= q <= 8)"
+        )
     m, lanes = x.shape
     assert lanes == LANES and m % block_m == 0, (x.shape, block_m)
     grid = (m // block_m,)

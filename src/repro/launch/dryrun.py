@@ -237,15 +237,29 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, fl_round: bool,
     return record
 
 
-def run_wire_ratio(arch: str, shape_name: str) -> dict:
+def run_wire_ratio(arch: str, shape_name: str, downlink: str = "off") -> dict:
     """Pod-scale wire accounting (ROADMAP pod-scale item, second half):
     lower the federated round on the 2x16x16 mesh in both wire modes and
     record the per-arch inter-pod byte ratio (uint8 wire / fp32 payload)
-    via the replica-group pod-crossing attribution."""
+    via the replica-group pod-crossing attribution.
+
+    ``downlink`` threads the broadcast mode into BOTH lowered rounds, so
+    the ratio measures the full round-trip wire discipline. Because the
+    aggregate is already pod-replicated after the uplink gather, the
+    broadcast leg adds no inter-pod HLO bytes — the downlink payload is
+    over-the-air, accounted analytically in the ``downlink_*`` fields
+    (fp32 = 4Z bytes vs wire = Z*q/8 + Z/8 + 4 bytes per client).
+    """
+    import jax
+    import numpy as np
+
     from repro.configs import get_config
-    from repro.dist.hlo_analysis import inter_axis_bytes, pod_partition_map
+    from repro.dist.hlo_analysis import (
+        inter_axis_bytes, pod_partition_map, wire_payload_split,
+    )
     from repro.launch import steps
     from repro.launch.mesh import make_production_mesh, mesh_label
+    from repro.models import abstract_params
     from repro.models.config import INPUT_SHAPES
 
     cfg = get_config(arch)
@@ -255,18 +269,21 @@ def run_wire_ratio(arch: str, shape_name: str) -> dict:
 
     rec: dict = {
         "arch": arch, "shape": shape_name, "mesh": mesh_label(mesh),
-        "step": "fl_round_wire_ratio", "ok": True,
+        "step": "fl_round_wire_ratio", "downlink": downlink, "ok": True,
     }
     for packed in (False, True):
         t0 = time.time()
         hlo = steps.lower_fl_round(
-            cfg, mesh, shape, wire_packed=packed
+            cfg, mesh, shape, wire_packed=packed, downlink=downlink
         ).compile().as_text()
         r = inter_axis_bytes(hlo, pods)
+        split = wire_payload_split(r)
         mode = "packed" if packed else "fp32"
         rec[f"{mode}_inter_bytes"] = r["inter_bytes"]
         rec[f"{mode}_unattributed_bytes"] = r["unattributed_bytes"]
         rec[f"{mode}_inter_by_kind"] = r["inter_by_kind"]
+        rec[f"{mode}_inter_wire_bytes"] = split["wire_bytes"]
+        rec[f"{mode}_inter_dense_bytes"] = split["dense_bytes"]
         rec[f"{mode}_wall_s"] = round(time.time() - t0, 1)
     # attribution must not silently degrade into the unattributed bucket
     assert rec["fp32_inter_bytes"] > 0 and rec["packed_inter_bytes"] > 0, rec
@@ -274,6 +291,18 @@ def run_wire_ratio(arch: str, shape_name: str) -> dict:
         rec["fp32_unattributed_bytes"], rec["packed_unattributed_bytes"]
     ) < 0.1 * rec["fp32_inter_bytes"], rec
     rec["inter_pod_ratio"] = rec["packed_inter_bytes"] / rec["fp32_inter_bytes"]
+    # over-the-air downlink payloads, per client (eq.-5 accounting at the
+    # fixed broadcast level)
+    z = sum(
+        int(np.prod(l.shape))
+        for l in jax.tree_util.tree_leaves(abstract_params(cfg))
+    )
+    rec["model_dim_z"] = z
+    rec["downlink_fp32_bytes"] = 4 * z
+    if downlink != "off":
+        q = steps.DOWNLINK_Q_BITS
+        rec["downlink_wire_bytes"] = (z * q) // 8 + (z + 7) // 8 + 4
+        rec["downlink_ratio"] = rec["downlink_wire_bytes"] / (4.0 * z)
     return rec
 
 
@@ -292,12 +321,17 @@ def main() -> int:
     ap.add_argument("--wire-ratio", action="store_true",
                     help="per-arch fl-round inter-pod byte-ratio record "
                          "(both wire modes, 2x16x16 mesh)")
+    ap.add_argument("--downlink", default="off",
+                    choices=("off", "quant", "delta"),
+                    help="server->client broadcast mode threaded into the "
+                         "lowered federated round (--wire-ratio only)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     try:
         if args.wire_ratio:
-            rec = run_wire_ratio(args.arch, args.shape)
+            rec = run_wire_ratio(args.arch, args.shape,
+                                 downlink=args.downlink)
         else:
             rec = run_one(
                 args.arch, args.shape, multi_pod=args.multi_pod,

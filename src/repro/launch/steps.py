@@ -30,6 +30,13 @@ from repro.optim import Optimizer, apply_updates, clip_by_global_norm
 
 Pytree = Any
 
+# Downlink broadcast key stream: derived from the round key by fold_in so
+# the uplink per-client split(key, K) stream is untouched whatever the mode.
+DOWNLINK_KEY_TAG = 13
+# The broadcast is one payload for every client, quantized at a fixed level
+# so the index plane stays uint8 (u8 indexes + sign bitmap + one fp32 range).
+DOWNLINK_Q_BITS = 8
+
 
 # ------------------------------------------------------------ train
 
@@ -148,7 +155,7 @@ def lower_decode_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape):
 
 def make_fl_round(
     cfg: ModelConfig, mesh: Mesh, *, lr: float = 1e-3, client_axis: str = "pod",
-    wire_packed: bool = False,
+    wire_packed: bool = False, downlink: str = "off",
 ):
     """One FL communication round at pod scale (paper Fig. 1 steps 3-5):
 
@@ -165,7 +172,18 @@ def make_fl_round(
     cutting inter-pod bytes ~3.6x (ratio ~0.28); the signs are packed 8
     per byte before the gather and unpacked on the receiving side, so the
     numerics are identical to the byte-plane format. q is clamped to 8.
+
+    ``downlink``: the server->client broadcast leg. ``"off"`` returns the
+    fp32 aggregate; ``"quant"`` stochastically quantizes the global model
+    to the paper wire format (one shared key/range — every client decodes
+    the identical payload); ``"delta"`` quantizes the round-to-round
+    update ``agg - theta^{n-1}`` instead, whose range shrinks as training
+    converges, so the same u8 plane carries a finer effective step.
     """
+    if downlink not in ("off", "quant", "delta"):
+        raise ValueError(
+            f"downlink mode {downlink!r} not in ('off', 'quant', 'delta')"
+        )
     n_clients = mesh.shape[client_axis]
 
     def local_step(params, batch):
@@ -203,15 +221,20 @@ def make_fl_round(
             qb = jnp.minimum(q_bits, 8)
 
             def pack_signs(bits):
-                """{0,1} u8 leaf (..., d) -> (..., ceil(d/8)) u8 bitmap.
+                """{0,1} u8 leaf (..., d) -> (..., ceil(d'/8)) u8 bitmap.
 
                 Packs along the LAST axis only (LSB first), so the leaf's
-                leading dims — where the intra-pod sharding lives — keep
-                their layout and the cross-pod gather stays a clean u8
-                window instead of a partitioner-hostile flat reshape.
+                other dims keep their intra-pod layout, and pads d up to a
+                multiple of 128 (8 bits x the widest mesh axis) so the
+                packed dim stays divisible by any axis the last dim was
+                sharded on. Without that, a leaf like zamba2's
+                (..., 7288) packs to a prime 911-wide plane the
+                partitioner can only replicate — and a replicated sign
+                plane crosses the pods at 8x its fair share. Power-of-two
+                dims >= 128 pad nothing.
                 """
                 d = bits.shape[-1]
-                pad = [(0, 0)] * (bits.ndim - 1) + [(0, (-d) % 8)]
+                pad = [(0, 0)] * (bits.ndim - 1) + [(0, (-d) % 128)]
                 b = jnp.pad(bits, pad).reshape(bits.shape[:-1] + (-1, 8))
                 bit_weights = 1 << jnp.arange(8, dtype=jnp.uint32)
                 return jnp.sum(
@@ -219,22 +242,29 @@ def make_fl_round(
                 ).astype(jnp.uint8)
 
             def client_wire(key_k, params_k, q_k):
-                leaves = jax.tree_util.tree_leaves(params_k)
+                leaves, treedef = jax.tree_util.tree_flatten(params_k)
                 tmax = jnp.max(jnp.stack([jnp.max(jnp.abs(l)) for l in leaves]))
                 levels = 2.0 ** q_k.astype(jnp.float32) - 1.0
                 safe = jnp.where(tmax > 0, tmax, 1.0)
+                # One key per leaf (as core.quantization.quantize_pytree):
+                # reusing key_k would hand same-shape leaves identical
+                # rounding uniforms, correlating their quantization error.
+                leaf_keys = jax.random.split(key_k, len(leaves))
 
-                def quant_leaf(leaf):
+                def quant_leaf(k_leaf, leaf):
                     scaled = jnp.abs(leaf.astype(jnp.float32)) * (levels / safe)
                     lower = jnp.floor(scaled)
-                    u = jax.random.uniform(key_k, leaf.shape)
+                    u = jax.random.uniform(k_leaf, leaf.shape)
                     idx = lower + (u < (scaled - lower)).astype(jnp.float32)
                     return (
                         jnp.minimum(idx, levels).astype(jnp.uint8),
                         pack_signs((leaf < 0).astype(jnp.uint8)),
                     )
 
-                return jax.tree_util.tree_map(quant_leaf, params_k), tmax
+                return jax.tree_util.tree_unflatten(
+                    treedef,
+                    [quant_leaf(k, l) for k, l in zip(leaf_keys, leaves)],
+                ), tmax
 
             wire, theta_max = jax.vmap(client_wire)(keys, new_params, qb)
             levels = 2.0 ** qb.astype(jnp.float32) - 1.0
@@ -282,23 +312,93 @@ def make_fl_round(
                 ).astype(leaf.dtype),
                 quantized,
             )
-        # broadcast the global model back to every client (downlink)
-        stacked = jax.tree_util.tree_map(
-            lambda g, c: jnp.broadcast_to(g[None], c.shape).astype(c.dtype),
-            agg, client_params,
-        )
+        # ------------------------------------------------ downlink leg
+        # The aggregate is already pod-replicated after the uplink gather,
+        # so the broadcast adds no inter-pod HLO bytes; the downlink modes
+        # change the payload the PS transmits over the air: 'quant' puts
+        # the global model on the same u8+signs+range wire as the uplink
+        # (Z + Z/8 bytes vs 4Z fp32), 'delta' encodes agg - theta^{n-1}.
+        # One key, one range, one uniform draw per leaf: every client
+        # decodes the identical broadcast.
+        if downlink == "off":
+            stacked = jax.tree_util.tree_map(
+                lambda g, c: jnp.broadcast_to(g[None], c.shape).astype(c.dtype),
+                agg, client_params,
+            )
+        else:
+            k_down = jax.random.fold_in(key, DOWNLINK_KEY_TAG)
+            dl_levels = 2.0**DOWNLINK_Q_BITS - 1.0
+            if downlink == "quant":
+                target = jax.tree_util.tree_map(
+                    lambda g: g.astype(jnp.float32), agg
+                )
+            else:
+                # per-client delta vs the params the round started from;
+                # the copies are identical by induction, so this is still
+                # one broadcast — computing it in the stacked layout keeps
+                # every op local to the client's pod.
+                target = jax.tree_util.tree_map(
+                    lambda g, c: g[None].astype(jnp.float32)
+                    - c.astype(jnp.float32),
+                    agg, client_params,
+                )
+            t_leaves, t_def = jax.tree_util.tree_flatten(target)
+            theta_d = jnp.max(
+                jnp.stack([jnp.max(jnp.abs(l)) for l in t_leaves])
+            )
+            safe_d = jnp.where(theta_d > 0, theta_d, 1.0)
+            dl_keys = jax.random.split(k_down, len(t_leaves))
+
+            def dl_quant(k_leaf, tgt):
+                scaled = jnp.abs(tgt) * (dl_levels / safe_d)
+                lower = jnp.floor(scaled)
+                # delta targets are stacked (K, ...) but the payload is
+                # ONE broadcast: draw the uniforms at the unstacked shape
+                # so every client slice rounds identically.
+                u_shape = tgt.shape[1:] if downlink == "delta" else tgt.shape
+                # legacy threefry lowers the big embedding-table draws to
+                # pod-crossing u32 all-reduces (involuntary remat in the
+                # SPMD partitioner); the counter-based partitionable form
+                # generates bits shard-locally. Scoped here so the uplink
+                # quantizer streams keep their pinned legacy bits.
+                with jax.threefry_partitionable(True):
+                    u = jax.random.uniform(k_leaf, u_shape, jnp.float32)
+                if downlink == "delta":
+                    u = u[None]
+                idx = lower + (u < (scaled - lower)).astype(jnp.float32)
+                deq = jnp.sign(tgt) * jnp.minimum(idx, dl_levels) * (
+                    safe_d / dl_levels
+                )
+                return jnp.where(theta_d > 0, deq, jnp.zeros_like(deq))
+
+            deq = jax.tree_util.tree_unflatten(
+                t_def, [dl_quant(k, l) for k, l in zip(dl_keys, t_leaves)]
+            )
+            if downlink == "quant":
+                stacked = jax.tree_util.tree_map(
+                    lambda d, c: jnp.broadcast_to(d[None], c.shape).astype(
+                        c.dtype
+                    ),
+                    deq, client_params,
+                )
+            else:
+                stacked = jax.tree_util.tree_map(
+                    lambda d, c: (c.astype(jnp.float32) + d).astype(c.dtype),
+                    deq, client_params,
+                )
         return stacked, losses.mean(), theta_max
 
     return fl_round
 
 
 def lower_fl_round(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
-                   client_axis: str = "pod", wire_packed: bool = False):
+                   client_axis: str = "pod", wire_packed: bool = False,
+                   downlink: str = "off"):
     from repro.models import abstract_params
 
     n_clients = mesh.shape[client_axis]
     fl_round = make_fl_round(cfg, mesh, client_axis=client_axis,
-                             wire_packed=wire_packed)
+                             wire_packed=wire_packed, downlink=downlink)
 
     params = abstract_params(cfg)
     stack = lambda t: jax.tree_util.tree_map(

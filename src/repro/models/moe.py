@@ -63,6 +63,30 @@ def moe_apply(
     return _moe_apply_dense(params, x, top_k=top_k, capacity_factor=capacity_factor)
 
 
+def _local_top_k(probs: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k over the last dim as k argmax+mask passes.
+
+    ``jax.lax.top_k`` lowers to a TopK custom-call whose SPMD rule
+    rematerializes the operand — an all-gather over EVERY sharded dim,
+    including the vmapped client dim of the federated round (sharded on
+    ``pod``), so each layer-scan step paid a cross-pod gather of the full
+    (U, B, S, E) prob plane. Iterated argmax/where is pure reduce +
+    elementwise over the (small, replicated) E dim and partitions cleanly
+    along the others. Tie-breaking matches ``lax.top_k`` (equal values
+    surface in index order: argmax returns the first occurrence, and the
+    mask exposes the next one on the following pass).
+    """
+    idxs = []
+    x = probs
+    for _ in range(k):
+        i = jnp.argmax(x, axis=-1)
+        idxs.append(i)
+        x = jnp.where(jax.nn.one_hot(i, x.shape[-1], dtype=bool), -jnp.inf, x)
+    gate_idx = jnp.stack(idxs, axis=-1)                            # (B,S,K)
+    gate_vals = jnp.take_along_axis(probs, gate_idx, axis=-1)
+    return gate_vals, gate_idx
+
+
 def _moe_apply_dense(
     params: dict,
     x: jax.Array,          # (B, S, D)
@@ -78,10 +102,15 @@ def _moe_apply_dense(
         "bsd,de->bse", x, params["router"].astype(dtype),
         preferred_element_type=jnp.float32,
     )
+    # The router einsum inherits the E (model-axis) sharding from the
+    # router weight; pin the plane to the batch/seq activation layout so
+    # the reshard happens once and softmax/top-k run on local
+    # (replicated) E.
+    logits = shard_act(logits, "bse")
     probs = jax.nn.softmax(logits, axis=-1)                        # (B,S,E) fp32
 
     # --- top-k routing with renormalized gates -------------------------
-    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)              # (B,S,K)
+    gate_vals, gate_idx = _local_top_k(probs, top_k)               # (B,S,K)
     gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
 
     capacity = max(int(capacity_factor * s * top_k / e), 1)

@@ -73,6 +73,8 @@ class RoundMetrics:
     corr_q_d: Any       # Pearson corr(q_i, D_i) over scheduled (Remark 2; NaN if undefined)
     ga_best: Any        # final-generation best J0 (NaN for non-GA modes)
     ga_median: Any      # final-generation median population J0 (NaN likewise)
+    dl_payload_bits: Any  # downlink broadcast payload (NaN when downlink off)
+    dl_mse: Any         # ||broadcast - exact aggregate||^2 / Z (NaN if off/untapped)
 
 
 jax.tree_util.register_dataclass(
@@ -139,6 +141,7 @@ def decision_metrics(
         energy_timeout=e_timeout, n_timeout=n_timeout,
         q_mean=q_mean, q_max=q_max, q_cont_mean=qc_mean,
         quant_mse=nan, corr_q_d=corr, ga_best=nan, ga_median=nan,
+        dl_payload_bits=nan, dl_mse=nan,
     )
 
 
@@ -154,6 +157,8 @@ def decision_metrics_host(
     quant_mse: Optional[float] = None,
     ga_best: Optional[float] = None,
     ga_median: Optional[float] = None,
+    dl_payload_bits: Optional[float] = None,
+    dl_mse: Optional[float] = None,
 ) -> dict:
     """Host replay of :func:`decision_metrics`: the SAME jitted function on
     f32-cast arrays, so every field whose inputs are exact across engines
@@ -172,6 +177,10 @@ def decision_metrics_host(
         out["ga_best"] = float(ga_best)
     if ga_median is not None:
         out["ga_median"] = float(ga_median)
+    if dl_payload_bits is not None:
+        out["dl_payload_bits"] = float(dl_payload_bits)
+    if dl_mse is not None:
+        out["dl_mse"] = float(dl_mse)
     return out
 
 

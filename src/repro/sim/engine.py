@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
+from repro.core import quantization as core_quant
 from repro.core.genetic import GAConfig, RoundContext, SystemParams
 from repro.obs import ledger as obs_ledger
 from repro.obs import metrics as obs_metrics
@@ -77,6 +78,53 @@ DROP_KEY_TAG = 7
 # fold_in tag for the eps-probe rate draw when no host ChannelModel exists
 # (cell-free topologies; single-BS setups probe the numpy model instead).
 PROBE_KEY_TAG = 8
+# fold_in tag deriving the downlink-broadcast quantization key from the
+# ROUND key (same tag as launch.steps.DOWNLINK_KEY_TAG): a separate stream,
+# so switching the downlink on never perturbs the channel/batch/uplink
+# uniforms and downlink-off runs stay bit-identical to the two-leg engine.
+DOWNLINK_KEY_TAG = 13
+
+
+@dataclasses.dataclass(frozen=True)
+class DownlinkConfig:
+    """Static gate for the server->client broadcast wire (frozen + hashable:
+    it selects a trace, it never rides through one).
+
+    mode    "off"   — fp32 broadcast, the pre-downlink engine bit for bit
+                      (the scan carry stays a 6-tuple and the lowered HLO is
+                      byte-identical, regressed in tests/test_obs.py);
+            "quant" — stochastically quantize the global aggregate at
+                      ``q_bits`` (paper eq. 4 on the flat model, one shared
+                      range) and carry the DEQUANTIZED model into the next
+                      round's local SGD;
+            "delta" — quantize the aggregate-minus-previous-broadcast delta
+                      instead; clients reconstruct prev + deq(delta). Every
+                      client holds the same previous broadcast, so one
+                      payload serves the fleet.
+    q_bits  downlink quantization level (the broadcast payload is
+            Z*q_bits + Z + 32 bits, mirroring the uplink eq. 5 format).
+    """
+
+    mode: str = "off"
+    q_bits: int = 8
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("off", "quant", "delta"):
+            raise ValueError(
+                f"downlink mode must be off/quant/delta, got {self.mode!r}"
+            )
+        if not 1 <= int(self.q_bits) <= 16:
+            raise ValueError(
+                f"downlink q_bits={self.q_bits} outside the wire format's "
+                "1..16 (uint16 index plane, see core.quantization)"
+            )
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "off"
+
+
+DOWNLINK_OFF = DownlinkConfig()
 
 # scenario-pytree policy names -> engine modes (the engine keeps its
 # historical mode names; scenarios speak the POLICIES vocabulary)
@@ -190,6 +238,7 @@ class FleetSim:
         name: str = "sim_qccf",
         telemetry: Optional[MetricsConfig] = None,
         ledger: Optional[obs_ledger.Ledger] = None,
+        downlink: Optional[DownlinkConfig] = None,
     ) -> None:
         flat0, unravel = ravel_pytree(init_params)
         self.flat0 = flat0.astype(jnp.float32)
@@ -242,6 +291,9 @@ class FleetSim:
         # run_host_policy write headers + per-round rows through.
         self.metrics_cfg = obs_metrics.METRICS_OFF if telemetry is None else telemetry
         self.ledger = ledger if ledger is not None else obs_ledger.Ledger(None)
+        # Downlink wire (static gate like the metrics config): "off" keeps
+        # the 6-tuple carry and the byte-identical pre-downlink trace.
+        self.downlink = DOWNLINK_OFF if downlink is None else downlink
         self._compiled: dict = {}
 
     # ------------------------------------------------------------ round body
@@ -265,8 +317,43 @@ class FleetSim:
         )
         return out.reshape(-1)
 
+    def _downlink_apply(self, round_key, new_flat, flat):
+        """Quantized server->client broadcast of the aggregated model.
+
+        Returns ``(bcast, dl_next)``: the dequantized model every client
+        starts the next round from (replacing the exact aggregate in the
+        carry), and the realized downlink bound term
+        L/2 * Z theta_d^2 / (4 (2^q - 1)^2) that the NEXT round's decision
+        adds to its quant_term (``bounds.downlink_term``; the error enters
+        the clients' training one round after the broadcast that injected
+        it). Quantization is ``core.quantization.quantize_array`` — the
+        paper's eq.-4 stochastic rounding on the flat model with one shared
+        range — keyed by ``fold_in(round_key, DOWNLINK_KEY_TAG)`` so the
+        channel/batch/uplink streams are untouched. ``delta`` mode encodes
+        aggregate - previous broadcast at the (smaller) delta range.
+        """
+        k_down = jax.random.fold_in(round_key, DOWNLINK_KEY_TAG)
+        dl = self.downlink
+        if dl.mode == "quant":
+            deq, theta_d = core_quant.quantize_array(k_down, new_flat, dl.q_bits)
+            bcast = deq
+        else:
+            deq, theta_d = core_quant.quantize_array(
+                k_down, new_flat - flat, dl.q_bits
+            )
+            bcast = flat + deq
+        levels = 2.0 ** float(dl.q_bits) - 1.0
+        dl_next = (self.sysp.lipschitz / 2.0 * self.z * theta_d**2
+                   / (4.0 * levels**2)).astype(jnp.float32)
+        return bcast, dl_next
+
     def _round_body(self, dyn, carry, xs, with_eval: bool):
-        flat, g_sq, sigma_sq, theta_max, lam1, lam2 = carry
+        if self.downlink.enabled:
+            # 7th carry slot: last round's realized downlink bound term
+            flat, g_sq, sigma_sq, theta_max, lam1, lam2, dl_prev = carry
+        else:
+            flat, g_sq, sigma_sq, theta_max, lam1, lam2 = carry
+            dl_prev = None
         key, ridx = xs
         k_ch, k_batch, k_quant = jax.random.split(key, 3)
         sysp, z = self.sysp, self.z
@@ -293,13 +380,14 @@ class FleetSim:
                 dec, ga_stats = search.ga_decide(
                     k_ga, rates, d_sizes, g_n, s_n, theta_max, lam1, lam2,
                     sysp, z, self.v_weight, cfg=self.ga_config,
-                    q_cap=self.q_cap, hetero=dyn["hetero"], with_stats=True,
+                    q_cap=self.q_cap, hetero=dyn["hetero"], dl_term=dl_prev,
+                    with_stats=True,
                 )
             else:
                 dec = search.ga_decide(
                     k_ga, rates, d_sizes, g_n, s_n, theta_max, lam1, lam2,
                     sysp, z, self.v_weight, cfg=self.ga_config,
-                    q_cap=self.q_cap, hetero=dyn["hetero"],
+                    q_cap=self.q_cap, hetero=dyn["hetero"], dl_term=dl_prev,
                 )
         elif mode == "same_size":
             # SameSize [26] runs the same GA machinery on a mean-size fake
@@ -331,9 +419,14 @@ class FleetSim:
                 self.q_cap,
             )
         else:
+            # dl_term: QCCF policies (greedy KKT / compiled-ga above) fold
+            # the previous broadcast's error into their lambda2 queue input;
+            # the paper baselines stay downlink-blind like their host
+            # counterparts (the broadcast still runs on the wire).
             dec = fast_policy.decide(
                 rates, d_sizes, g_n, s_n, theta_max, lam2, sysp, z,
                 self.v_weight, q_cap=self.q_cap, hetero=dyn["hetero"],
+                dl_term=dl_prev,
             )
         # ---- active-set compaction: O(U) work ends with the decision.
         # Everything below lives on the fixed S = min(U, C) slot axis.
@@ -359,6 +452,12 @@ class FleetSim:
         w_slot = d_slot / jnp.maximum(d_n, 1e-12)          # eq. 2 weights
         agg = self._aggregate(idx, signs, theta, w_slot, q_slot)
         new_flat = jnp.where(d_n > 0, agg[: self.z], flat)
+        if self.downlink.enabled:
+            # the carried model becomes what the CLIENTS reconstruct from
+            # the quantized broadcast — next round's local SGD (and the
+            # eval below) start from it, like the real wire would
+            exact_flat = new_flat
+            new_flat, dl_next = self._downlink_apply(key, new_flat, flat)
 
         g_sq = ema_update(g_sq, scatter_slots(slots, g_obs, u), dec.a)
         sigma_sq = ema_update(sigma_sq, scatter_slots(slots, s_obs, u),
@@ -405,14 +504,26 @@ class FleetSim:
                     rm, ga_best=ga_stats["ga_best"],
                     ga_median=ga_stats["ga_median"],
                 )
+            if self.downlink.enabled:
+                # broadcast payload (analytic eq.-5 format) + realized
+                # broadcast error vs the exact aggregate
+                dl_bits = jnp.float32(core_quant.payload_bits(
+                    self.z, self.downlink.q_bits))
+                rm = dataclasses.replace(rm, dl_payload_bits=dl_bits)
+                if mcfg.quant_mse:
+                    dl_mse = jnp.sum((new_flat - exact_flat) ** 2) / self.z
+                    rm = dataclasses.replace(rm, dl_mse=dl_mse)
             out["metrics"] = rm
+        if self.downlink.enabled:
+            return (new_flat, g_sq, sigma_sq, theta_max, lam1, lam2,
+                    dl_next), out
         return (new_flat, g_sq, sigma_sq, theta_max, lam1, lam2), out
 
     # ---------------------------------------------------------------- runs
 
     def _init_carry(self):
         u = self.fleet.n_clients
-        return (
+        carry = (
             self.flat0,
             jnp.ones((u,), jnp.float32),
             jnp.ones((u,), jnp.float32),
@@ -420,6 +531,9 @@ class FleetSim:
             jnp.float32(0.0),
             jnp.float32(0.0),
         )
+        if self.downlink.enabled:
+            carry = carry + (jnp.float32(0.0),)  # dl_prev: no broadcast yet
+        return carry
 
     def _scan_xs(self, n_rounds: int):
         """The scan's per-round inputs: (round keys, round indices). The
@@ -502,6 +616,7 @@ class FleetSim:
             c=int(self.channel.params.n_channels),
             z=int(self.z), rounds=int(n_rounds), seed=self.seed,
             telemetry=self.metrics_cfg.enabled,
+            downlink=self.downlink.mode,
         )
 
     def _ledger_row(self, res: SimResult, n: int) -> dict:
@@ -574,8 +689,15 @@ class FleetSim:
         With the quant_mse tap on (telemetry), a trailing per-round MSE is
         returned — the same ops on the same wire values as the scan's tap,
         so the replayed metric matches the compiled one bit for bit.
+
+        With the downlink on, the quantized broadcast is applied on the
+        same folded round key as the scan (``DOWNLINK_KEY_TAG``) and the
+        realized next-round bound term (plus the dl MSE when tapped) ride
+        the return tuple, so ``run_host_policy`` can feed the policy the
+        identical ``dl_term`` stream.
         """
         tap_mse = self.metrics_cfg.enabled and self.metrics_cfg.quant_mse
+        dl_on = self.downlink.enabled
 
         @jax.jit
         def exec_round(flat, slots, q_slot, w_slot, key):
@@ -594,6 +716,9 @@ class FleetSim:
             )
             agg = self._aggregate(idx, signs, theta, w_slot, q_slot)
             new_flat = jnp.where(jnp.sum(w_slot) > 0, agg[: self.z], flat)
+            if dl_on:
+                exact_flat = new_flat
+                new_flat, dl_next = self._downlink_apply(key, new_flat, flat)
             if with_eval:
                 acc, loss = self.eval_fn(new_flat)
             else:
@@ -604,6 +729,11 @@ class FleetSim:
                 mse = jnp.sum((agg[: self.z] - exact) ** 2) / self.z
                 out = out + (jnp.where(jnp.sum(w_slot) > 0, mse,
                                        jnp.float32(float("nan"))),)
+            if dl_on:
+                out = out + (dl_next,)
+                if tap_mse:
+                    out = out + (jnp.sum((new_flat - exact_flat) ** 2)
+                                 / self.z,)
             return out
 
         return exec_round
@@ -631,6 +761,13 @@ class FleetSim:
         exec_round = self._exec_fn(with_eval)
         mcfg = self.metrics_cfg
         tap_mse = mcfg.enabled and mcfg.quant_mse
+        dl_on = self.downlink.enabled
+        # previous round's realized downlink bound term (0.0 before the
+        # first broadcast) — same stream the scan threads through its carry
+        dl_prev_host = 0.0
+        dl_bits_host = (float(core_quant.payload_bits(self.z,
+                                                      self.downlink.q_bits))
+                        if dl_on else None)
         u = self.fleet.n_clients
         d_sizes = self.fleet.d_sizes.astype(np.float64)
         g_sq = np.ones(u)
@@ -661,6 +798,8 @@ class FleetSim:
             if hasattr(policy, "set_round_key"):
                 # same per-round GA key derivation as the compiled-ga scan
                 policy.set_round_key(jax.random.fold_in(keys[n], search.GA_KEY_TAG))
+            if dl_on and hasattr(policy, "set_downlink_term"):
+                policy.set_downlink_term(dl_prev_host)
             dec = policy.decide(ctx)
             # continuous-q tap: KKT-backed policies attach the clipped
             # q_hat; baselines fall back to their raw pre-clamp level
@@ -702,11 +841,18 @@ class FleetSim:
             w_slot = d_slot / np.maximum(d_slot.sum(dtype=np.float32),
                                          np.float32(1e-12))
             q_slot = np.where(mask, q_exec[cids], 0)
-            flat, g_obs, s_obs, theta, acc, loss, *mse_tap = exec_round(
+            flat, g_obs, s_obs, theta, acc, loss, *extras = exec_round(
                 flat, jnp.asarray(slots, jnp.int32),
                 jnp.asarray(q_slot, jnp.int32),
                 jnp.asarray(w_slot, jnp.float32), keys[n],
             )
+            extras = list(extras)
+            mse_tap = extras.pop(0) if tap_mse else None
+            dl_mse_tap = None
+            if dl_on:
+                dl_next = extras.pop(0)
+                if tap_mse:
+                    dl_mse_tap = extras.pop(0)
             sel = cids[mask]
             g_sq[sel] = 0.7 * g_sq[sel] + 0.3 * np.asarray(g_obs)[mask]
             sigma_sq[sel] = 0.7 * sigma_sq[sel] + 0.3 * np.maximum(
@@ -738,9 +884,15 @@ class FleetSim:
                     a_np, np.asarray(dec.q), np.asarray(q_cont_host),
                     np.asarray(dec.f), np.asarray(dec.energy), d_sizes,
                     float(dec.data_term), float(dec.quant_term), self.sysp,
-                    quant_mse=float(mse_tap[0]) if tap_mse else None,
+                    quant_mse=float(mse_tap) if tap_mse else None,
                     ga_best=getattr(dec, "ga_best", None),
+                    dl_payload_bits=dl_bits_host,
+                    dl_mse=(float(dl_mse_tap) if dl_mse_tap is not None
+                            else None),
                 ))
+            if dl_on:
+                # becomes next round's dl_term, as in the scan's carry
+                dl_prev_host = float(dl_next)
         self.final_flat = flat
         self.last_host_metrics = host_metrics if mcfg.enabled else None
         run_s = time.perf_counter() - t_run0
@@ -807,6 +959,7 @@ def build_sim(
     name: Optional[str] = None,
     telemetry: Optional[MetricsConfig] = None,
     ledger: Optional[obs_ledger.Ledger] = None,
+    downlink: "Optional[DownlinkConfig | str]" = None,
 ) -> FleetSim:
     """Mirror of ``repro.fl.experiment.build_experiment`` for the compiled
     engine: same task specs, same dataset/draw seeds, same client drop, and
@@ -902,6 +1055,9 @@ def build_sim(
     if name is None:
         name = (f"sim_{scenario.name}_{policy_mode}" if scenario is not None
                 else "sim_qccf")
+    if isinstance(downlink, str):
+        # convenience: "quant"/"delta"/"off" at default q_bits
+        downlink = DownlinkConfig(mode=downlink)
     return FleetSim(
         fleet, params, loss_fn, eval_fn, channel, sysp,
         eps1=eps1, eps2=eps2, v_weight=v_weight, lr=lr,
@@ -909,5 +1065,5 @@ def build_sim(
         block_m=block_m, seed=seed, host_channel=host_channel,
         policy_mode=policy_mode, ga_config=ga_config,
         hetero=hetero, scenario=scenario, name=name,
-        telemetry=telemetry, ledger=ledger,
+        telemetry=telemetry, ledger=ledger, downlink=downlink,
     )

@@ -361,11 +361,19 @@ def finish_decision(
     v_weight: float,
     q_cap: int = 8,
     hetero=None,       # (U,) scheduling multiplier (None = hetero-blind)
+    dl_term=None,      # scalar: previous round's realized downlink bound term
 ) -> FastDecision:
     """Steps 2-3 of the fast path for ANY channel assignment: infeasibility
     drop + vectorized KKT + bound terms. Shared by the greedy :func:`decide`
     and by the compiled GA fitness (``repro.sim.search``), which evaluates
-    every chromosome through exactly this code path."""
+    every chromosome through exactly this code path.
+
+    ``dl_term`` (when the engine broadcasts a quantized downlink) is the
+    previous round's realized ``bounds.downlink_term`` — added to the
+    returned ``quant_term`` so the lambda2 queue (and through it every
+    subsequent KKT solve) sees the server->client error. It is constant
+    across assignments, so the within-round argmin is unchanged; ``None``
+    (downlink off) traces the exact pre-downlink program."""
     u = d_sizes.shape[0]
 
     # Feasibility does not depend on w or the queues, so one drop pass
@@ -406,6 +414,8 @@ def finish_decision(
     consts = sysp.bound_constants()
     dt = data_term(consts, af, w_full, w_round, g_sq, sigma_sq, hetero)
     qt = quant_term(consts, w_round, z, theta_max, jnp.maximum(q, 1))
+    if dl_term is not None:
+        qt = qt + dl_term
     payload = jnp.sum(jnp.where(a, z * q.astype(jnp.float32) + z + RANGE_BITS, 0.0))
     # drop the -1-marked channels of clients that failed the feasibility gate
     assign_kept = jnp.where(
@@ -432,13 +442,14 @@ def decide(
     v_weight: float,
     q_cap: int = 8,
     hetero=None,
+    dl_term=None,
 ) -> FastDecision:
     """One fully traced decision round (steps 1-2 of the fast path)."""
     assign = greedy_assign(rates)
     v_assigned, a0 = participation_from_assign(assign, rates)
     return finish_decision(
         assign, v_assigned, a0, d_sizes, g_sq, sigma_sq, theta_max, lam2,
-        sysp, z, v_weight, q_cap=q_cap, hetero=hetero,
+        sysp, z, v_weight, q_cap=q_cap, hetero=hetero, dl_term=dl_term,
     )
 
 
@@ -463,6 +474,12 @@ class HostFastPolicy:
         self.hetero = None if hetero is None else np.asarray(hetero, np.float64)
         self.lambda1 = 0.0
         self.lambda2 = 0.0
+        self.dl_term = None
+
+    def set_downlink_term(self, dl_term) -> None:
+        """Engine hook (``run_host_policy``): last round's realized downlink
+        bound term, mirrored into this round's quant_term like the scan."""
+        self.dl_term = dl_term
 
     def decide(self, ctx):
         from repro.core.genetic import Decision
@@ -470,7 +487,7 @@ class HostFastPolicy:
         fd = decide_host(
             ctx.rates, ctx.d_sizes, ctx.g_sq, ctx.sigma_sq, ctx.theta_max,
             self.lambda2, self.sysp, ctx.z, self.v_weight, q_cap=self.q_cap,
-            hetero=self.hetero,
+            hetero=self.hetero, dl_term=self.dl_term,
         )
         dec = Decision(
             assign=fd.assign, a=fd.a, q=fd.q, f=fd.f, energy=fd.energy,
@@ -501,6 +518,7 @@ def finish_host(
     v_weight: float,
     q_cap: int = 8,
     hetero: np.ndarray | None = None,
+    dl_term: float | None = None,
 ) -> FastDecision:
     """Numpy mirror of :func:`finish_decision` for ANY assignment: the
     per-client solve goes through the trusted scalar ``repro.core.kkt``.
@@ -551,6 +569,8 @@ def finish_host(
     af = a.astype(np.float64)
     dt = bounds.data_term(consts, af, w_full, w_round, g_sq, sigma_sq, hetero)
     qt = bounds.quant_term(consts, w_round, z, theta_max, np.maximum(q, 1))
+    if dl_term is not None:
+        qt = qt + float(dl_term)
     payload = float(np.sum(np.where(a, z * q + z + RANGE_BITS, 0.0)))
     assign_kept = np.where((assign >= 0) & a[np.clip(assign, 0, u - 1)], assign, -1)
     return FastDecision(
@@ -574,11 +594,12 @@ def decide_host(
     v_weight: float,
     q_cap: int = 8,
     hetero: np.ndarray | None = None,
+    dl_term: float | None = None,
 ) -> FastDecision:
     """Numpy oracle for :func:`decide`: greedy assignment + scalar KKT."""
     return finish_host(
         greedy_assign_host(rates), rates, d_sizes, g_sq, sigma_sq, theta_max,
-        lam2, sysp, z, v_weight, q_cap=q_cap, hetero=hetero,
+        lam2, sysp, z, v_weight, q_cap=q_cap, hetero=hetero, dl_term=dl_term,
     )
 
 

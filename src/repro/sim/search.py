@@ -161,6 +161,7 @@ def evaluate_population(
     q_cap: int,
     repair_infeasible: bool,
     hetero=None,
+    dl_term=None,
 ) -> jax.Array:
     """(P,) drift-plus-penalty objective J0 per chromosome (eq. 26, sound
     form): lam1 * data_term + lam2 * quant_term + V * energy, through the
@@ -168,13 +169,16 @@ def evaluate_population(
     heterogeneity scheduling multiplier ``hetero``, so the GA's fitness
     favours keeping high-KL clients scheduled). With ``repair_infeasible``
     False, chromosomes whose scheduled set needed the feasibility drop get
-    ``J0_INFEASIBLE`` (the paper's fitness-0 rule)."""
+    ``J0_INFEASIBLE`` (the paper's fitness-0 rule). ``dl_term`` is the
+    engine's previous-round downlink bound term (see ``finish_decision``):
+    a constant shift of every chromosome's J0, so selection is unchanged,
+    but the winner's ``quant_term`` carries it into the lambda2 queue."""
 
     def eval_one(assign):
         v_assigned, a0 = fast_policy.participation_from_assign(assign, rates)
         fd = fast_policy.finish_decision(
             assign, v_assigned, a0, d_sizes, g_sq, sigma_sq, theta_max, lam2,
-            sysp, z, v_weight, q_cap=q_cap, hetero=hetero,
+            sysp, z, v_weight, q_cap=q_cap, hetero=hetero, dl_term=dl_term,
         )
         j0 = (lam1 * fd.data_term + lam2 * fd.quant_term
               + v_weight * jnp.sum(fd.energy))
@@ -203,6 +207,7 @@ def ga_decide(
     cfg: GAConfig = GAConfig(),
     q_cap: int = 8,
     hetero=None,
+    dl_term=None,
     with_stats: bool = False,
 ) -> fast_policy.FastDecision:
     """Algorithm 1, fully traced: GA over assignments + KKT fitness.
@@ -236,6 +241,7 @@ def ga_decide(
         j0 = evaluate_population(
             pop, rates, d_sizes, g_sq, sigma_sq, theta_max, lam1, lam2,
             sysp, z, v_weight, q_cap, cfg.repair_infeasible, hetero=hetero,
+            dl_term=dl_term,
         )
         i_star = jnp.argmin(j0)                                # ties -> first
         better = j0[i_star] < best_j0
@@ -253,7 +259,7 @@ def ga_decide(
     v_assigned, a0 = fast_policy.participation_from_assign(best_assign, rates)
     fd = fast_policy.finish_decision(
         best_assign, v_assigned, a0, d_sizes, g_sq, sigma_sq, theta_max,
-        lam2, sysp, z, v_weight, q_cap=q_cap, hetero=hetero,
+        lam2, sysp, z, v_weight, q_cap=q_cap, hetero=hetero, dl_term=dl_term,
     )
     if with_stats:
         best_trace, median_trace = _trace
@@ -342,6 +348,7 @@ def run_ga_host(
     cfg: GAConfig = GAConfig(),
     q_cap: int = 8,
     hetero: Optional[np.ndarray] = None,
+    dl_term: Optional[float] = None,
 ) -> fast_policy.FastDecision:
     """Numpy oracle of :func:`ga_decide` on the SAME key schedule.
 
@@ -363,7 +370,7 @@ def run_ga_host(
     def eval_one(assign: np.ndarray) -> tuple[fast_policy.FastDecision, float]:
         fd = fast_policy.finish_host(
             assign, rates, d_sizes, g_sq, sigma_sq, theta_max, lam2, sysp,
-            z, v_weight, q_cap=q_cap, hetero=hetero,
+            z, v_weight, q_cap=q_cap, hetero=hetero, dl_term=dl_term,
         )
         j0 = _j0_host(fd, lam1, lam2, v_weight)
         if not cfg.repair_infeasible:
@@ -441,10 +448,16 @@ class HostGAPolicy:
         self.hetero = None if hetero is None else np.asarray(hetero, np.float64)
         self.lambda1 = 0.0
         self.lambda2 = 0.0
+        self.dl_term = None
         self._round_key: Optional[jax.Array] = None
 
     def set_round_key(self, key: jax.Array) -> None:
         self._round_key = key
+
+    def set_downlink_term(self, dl_term) -> None:
+        """Engine hook (``run_host_policy``): last round's realized downlink
+        bound term, mirrored into the GA fitness like the compiled scan."""
+        self.dl_term = dl_term
 
     def decide(self, ctx) -> Decision:
         assert self._round_key is not None, "set_round_key before decide"
@@ -454,7 +467,7 @@ class HostGAPolicy:
             np.asarray(ctx.g_sq), np.asarray(ctx.sigma_sq),
             np.asarray(ctx.theta_max), self.lambda1, self.lambda2,
             self.sysp, ctx.z, self.v_weight, cfg=self.cfg, q_cap=self.q_cap,
-            hetero=self.hetero,
+            hetero=self.hetero, dl_term=self.dl_term,
         )
         dec = Decision(
             assign=fd.assign, a=fd.a, q=fd.q, f=fd.f, energy=fd.energy,

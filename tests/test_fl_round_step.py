@@ -92,3 +92,97 @@ def test_fl_round_heterogeneous_q_changes_noise():
             for a, p in zip(jax.tree_util.tree_leaves(tq), jax.tree_util.tree_leaves(params))
         )
     assert errs[8] < errs[2]
+
+
+@pytest.mark.parametrize("downlink", ["quant", "delta"])
+def test_fl_round_downlink_within_one_step(downlink):
+    """The quantized broadcast reconstructs the fp32 aggregate to within
+    one downlink quantization step (range over the mode's target: the
+    aggregate itself for 'quant', the round delta for 'delta')."""
+    from repro.launch.steps import DOWNLINK_Q_BITS
+
+    cfg = get_reduced("yi_6b")
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    client_params = jax.tree_util.tree_map(lambda x: x[None], params)
+    batch = _batch(cfg, key, 1)
+    q = jnp.array([8], jnp.int32)
+    w = jnp.array([1.0], jnp.float32)
+    args = (client_params, batch, q, w, jax.random.PRNGKey(1))
+
+    off = make_fl_round(cfg, mesh, lr=1e-2, client_axis="data")
+    agg_stacked, _, _ = jax.jit(off)(*args)
+    on = make_fl_round(cfg, mesh, lr=1e-2, client_axis="data",
+                       downlink=downlink)
+    bcast_stacked, loss, _ = jax.jit(on)(*args)
+    assert jnp.isfinite(loss)
+
+    agg_l = jax.tree_util.tree_leaves(agg_stacked)
+    bc_l = jax.tree_util.tree_leaves(bcast_stacked)
+    if downlink == "quant":
+        theta_d = max(float(jnp.abs(l).max()) for l in agg_l)
+    else:
+        theta_d = max(
+            float(jnp.abs(a.astype(jnp.float32) - c.astype(jnp.float32)).max())
+            for a, c in zip(agg_l, jax.tree_util.tree_leaves(client_params))
+        )
+    step = theta_d / (2.0**DOWNLINK_Q_BITS - 1.0)
+    err = max(
+        float(jnp.abs(b.astype(jnp.float32) - a.astype(jnp.float32)).max())
+        for b, a in zip(bc_l, agg_l)
+    )
+    assert err <= step + 1e-6
+    # delta's target range shrinks with the LR-sized update, so its
+    # effective step (and error) is far below quant's full-model range
+    if downlink == "delta":
+        full_range = max(float(jnp.abs(l).max()) for l in agg_l)
+        assert err < full_range / (2.0**DOWNLINK_Q_BITS - 1.0)
+
+
+def test_fl_round_bad_downlink_mode_raises():
+    cfg = get_reduced("yi_6b")
+    with pytest.raises(ValueError, match="downlink"):
+        make_fl_round(cfg, make_host_mesh(), downlink="fp8")
+
+
+def test_client_wire_per_leaf_keys_decorrelated():
+    """Regression: the packed wire used ONE key for every leaf, so
+    same-shape leaves holding identical values produced identical
+    stochastic-rounding draws (correlated quantization error). With
+    per-leaf split keys, equal-valued same-shape leaves must round
+    independently at a coarse level."""
+    cfg = get_reduced("yi_6b")
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    # plant two identical same-shape leaves (e.g. paired projections)
+    shapes = {}
+    pair = None
+    for i, l in enumerate(leaves):
+        k = (l.shape, str(l.dtype))
+        if k in shapes and l.size >= 1024:
+            pair = (shapes[k], i)
+            break
+        shapes[k] = i
+    assert pair is not None, "reduced config lost its same-shape leaf pair"
+    i0, i1 = pair
+    leaves[i1] = leaves[i0]
+    params = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    client_params = jax.tree_util.tree_map(lambda x: x[None], params)
+    batch = _batch(cfg, key, 1)
+    # lr=0 keeps the planted leaves equal through the local step; q=1 makes
+    # nearly every coordinate a coin flip, maximizing the signal
+    fl_round = make_fl_round(cfg, mesh, lr=0.0, client_axis="data",
+                             wire_packed=True)
+    new_stacked, _, _ = jax.jit(fl_round)(
+        client_params, batch, jnp.array([1], jnp.int32),
+        jnp.array([1.0], jnp.float32), jax.random.PRNGKey(1),
+    )
+    out = jax.tree_util.tree_leaves(new_stacked)
+    assert not bool(jnp.array_equal(out[i0], out[i1])), (
+        "identical same-shape leaves quantized with identical draws — "
+        "the per-leaf key split regressed to a shared key"
+    )

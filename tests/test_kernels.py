@@ -94,3 +94,16 @@ def test_kernel_vs_core_quantize_same_distribution():
     # both unbiased: mean error ~ 0 at matching scale
     assert abs(np.mean(errs_core)) < 5e-4
     assert abs(np.mean(errs_kern)) < 5e-4
+
+
+def test_quantize_kernel_q_over_8_raises():
+    """Regression twin of core.quantization's uint16 guard: the kernel's
+    index plane is uint8, so a static q > 8 must fail loudly instead of
+    wrapping the magnitude index."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 128))
+    rbits = jax.random.bits(jax.random.PRNGKey(1), (256, 128), jnp.uint32)
+    scale = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    with pytest.raises(ValueError, match="uint8"):
+        sq.quantize(x, rbits, scale, 9, interpret=True)
+    with pytest.raises(ValueError, match="uint8"):
+        sq.quantize(x, rbits, scale, 0, interpret=True)

@@ -67,6 +67,19 @@ def test_property_roundtrip_levels(bits, size, scale, seed):
     assert bool(jnp.all((xq == 0) | (jnp.sign(xq) == jnp.sign(x))))
 
 
+def test_quantize_indices_static_q_over_16_raises():
+    """Regression: a static q > 16 used to wrap the uint16 index plane
+    silently (2^17 - 1 does not fit); now it fails loudly."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    with pytest.raises(ValueError, match="uint16"):
+        q.quantize_indices(jax.random.PRNGKey(1), x, 17)
+    # the boundary level still fits and picks the wide dtype
+    idx16, _, _ = q.quantize_indices(jax.random.PRNGKey(1), x, 16)
+    assert idx16.dtype == jnp.uint16
+    idx8, _, _ = q.quantize_indices(jax.random.PRNGKey(1), x, 8)
+    assert idx8.dtype == jnp.uint8
+
+
 def test_zero_tensor_safe():
     x = jnp.zeros((64,))
     xq, tmax = q.quantize_array(jax.random.PRNGKey(0), x, 4)

@@ -1,0 +1,159 @@
+"""Quantized server->client broadcast (sim.engine.DownlinkConfig).
+
+Covers the downlink leg of the compiled fleet engine: the off-mode HLO
+identity (downlink off lowers the byte-identical pre-downlink scan), the
+scan vs host-replay parity with the broadcast on (both wire modes), the
+Lemma-1 unbiasedness of the broadcast itself, the analytic payload
+accounting, and the dl_term threading into the QCCF decision.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantization as core_quant
+from repro.core.bounds import BoundConstants, downlink_term
+from repro.obs.metrics import MetricsConfig
+from repro.sim import build_sim
+from repro.sim.engine import DOWNLINK_KEY_TAG, DownlinkConfig
+
+
+def test_downlink_config_validation():
+    assert DownlinkConfig().mode == "off" and not DownlinkConfig().enabled
+    assert DownlinkConfig(mode="delta", q_bits=4).enabled
+    with pytest.raises(ValueError):
+        DownlinkConfig(mode="fp8")
+    with pytest.raises(ValueError):
+        DownlinkConfig(mode="quant", q_bits=0)
+    with pytest.raises(ValueError):
+        # q > 16 would overflow the uint16 wire index plane
+        DownlinkConfig(mode="quant", q_bits=17)
+
+
+def test_downlink_off_is_hlo_identical():
+    """downlink='off' (and the default None) lowers the exact pre-downlink
+    scan: 6-tuple carry, no broadcast ops — byte-identical HLO."""
+    base = build_sim("tiny", n_clients=8, n_channels=4, seed=3, n_test=64)
+    off = build_sim("tiny", n_clients=8, n_channels=4, seed=3, n_test=64,
+                    downlink="off")
+    assert base.lower(4).as_text() == off.lower(4).as_text()
+
+
+@pytest.mark.parametrize("mode", ["quant", "delta"])
+def test_downlink_scan_equals_host_replay(mode):
+    """With the broadcast on, the one-scan engine and the host-policy
+    replay still agree decision-for-decision: the replay folds the same
+    DOWNLINK_KEY_TAG stream and feeds the policy the same dl_term."""
+    kw = dict(n_clients=8, n_channels=4, seed=3, n_test=64,
+              downlink=mode, telemetry=MetricsConfig(enabled=True))
+    sim_a = build_sim("tiny", **kw)
+    res_c = sim_a.run_compiled(6)
+    sim_b = build_sim("tiny", **kw)
+    res_h = sim_b.run_host_policy(sim_b.make_host_policy(), 6, channel="sim")
+    np.testing.assert_array_equal(
+        np.array([r.n_scheduled for r in res_h.records]), res_c.n_scheduled
+    )
+    np.testing.assert_array_equal(
+        np.stack([r.q_levels for r in res_h.records]), res_c.q_levels
+    )
+    np.testing.assert_allclose(
+        np.array([r.accuracy for r in res_h.records]), res_c.accuracy,
+        atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.array([r.energy for r in res_h.records]), res_c.energy, rtol=1e-5
+    )
+    # the telemetry taps replay too: payload is the analytic constant and
+    # the realized broadcast MSE matches within the engine parity band
+    hm = sim_b.last_host_metrics
+    bits = float(core_quant.payload_bits(sim_a.z, 8))
+    np.testing.assert_array_equal(res_c.metrics["dl_payload_bits"],
+                                  np.full(6, bits, np.float32))
+    assert all(m["dl_payload_bits"] == bits for m in hm)
+    # analog tap: XLA fuses the (broadcast - exact)^2 reduction differently
+    # inside vs outside the scan; delta-mode MSEs are ~1e-9 so the relative
+    # band is wider (see repro.obs.metrics docstring on exact vs analog)
+    np.testing.assert_allclose(
+        res_c.metrics["dl_mse"], [m["dl_mse"] for m in hm],
+        rtol=1e-3, atol=1e-12,
+    )
+
+
+@pytest.mark.parametrize("mode", ["quant", "delta"])
+def test_downlink_broadcast_unbiased(mode):
+    """Lemma 1 holds for the broadcast leg: E[bcast] = exact aggregate,
+    averaging _downlink_apply over many independent round keys."""
+    sim = build_sim("tiny", n_clients=8, n_channels=4, seed=0, n_test=64,
+                    downlink=DownlinkConfig(mode=mode, q_bits=2))
+    rng = np.random.default_rng(5)
+    flat = jnp.asarray(rng.normal(size=sim.z) * 0.3, jnp.float32)
+    new_flat = flat + jnp.asarray(rng.normal(size=sim.z) * 0.05, jnp.float32)
+    n = 300
+    keys = jax.random.split(jax.random.PRNGKey(9), n)
+    bcasts, _ = jax.vmap(
+        lambda k: sim._downlink_apply(k, new_flat, flat)
+    )(keys)
+    mean = np.asarray(bcasts.mean(axis=0))
+    # rounding-noise standard error at q=2 over n draws, ~4 sigma slack
+    theta = float(jnp.max(jnp.abs(new_flat if mode == "quant"
+                                  else new_flat - flat)))
+    se = theta / (2**2 - 1) / np.sqrt(n) * 4.0
+    assert np.abs(mean - np.asarray(new_flat)).max() < se
+    # every coordinate within one quantization step of the target
+    step = theta / (2**2 - 1)
+    assert float(jnp.abs(bcasts[0] - new_flat).max()) <= step + 1e-6
+
+
+def test_downlink_key_stream_isolated():
+    """The broadcast draws on fold_in(round_key, DOWNLINK_KEY_TAG) — the
+    uplink split(key, 3) streams are untouched, so the scheduled set and
+    q levels match the downlink-off run round for round."""
+    kw = dict(n_clients=8, n_channels=4, seed=3, n_test=64)
+    off = build_sim("tiny", **kw).run_compiled(5, with_eval=False)
+    on = build_sim("tiny", downlink="quant", **kw).run_compiled(
+        5, with_eval=False)
+    # round 0 decisions are made before any broadcast error exists and the
+    # channel/batch/uplink draws are shared: identical first round
+    np.testing.assert_array_equal(on.q_levels[0], off.q_levels[0])
+    np.testing.assert_array_equal(on.n_scheduled[0], off.n_scheduled[0])
+    assert on.energy[0] == off.energy[0]
+    # and the fold_in tag is the one the launch-side round uses
+    from repro.launch import steps as launch_steps
+    assert DOWNLINK_KEY_TAG == launch_steps.DOWNLINK_KEY_TAG
+
+
+def test_downlink_term_shifts_quant_term_only():
+    """The dl_term hook adds the (decision-independent) broadcast error to
+    the C7 drift: same schedule, same q, quant_term up by exactly dl_term."""
+    from repro.core.genetic import RoundContext
+
+    sim = build_sim("tiny", n_clients=8, n_channels=4, seed=1, n_test=64)
+    pol_a = sim.make_host_policy()
+    pol_b = sim.make_host_policy()
+    pol_b.set_downlink_term(0.125)
+    rates = np.random.default_rng(0).random((8, 4)) * 2e5 + 1e4
+
+    def ctx():
+        return RoundContext(
+            rates=rates.copy(),
+            d_sizes=sim.fleet.d_sizes.astype(np.float64),
+            g_sq=np.ones(8), sigma_sq=np.ones(8), theta_max=np.ones(8),
+            z=sim.z,
+        )
+
+    dec_a = pol_a.decide(ctx())
+    dec_b = pol_b.decide(ctx())
+    np.testing.assert_array_equal(dec_a.a, dec_b.a)
+    np.testing.assert_array_equal(dec_a.q, dec_b.q)
+    assert dec_b.quant_term == pytest.approx(dec_a.quant_term + 0.125)
+
+
+def test_downlink_term_formula():
+    """core.bounds.downlink_term is the broadcast Lemma-1 bound scaled by
+    L/2 — no per-client weight sum (the error is common to every client)."""
+    c = BoundConstants(eta=0.05, tau=4, lipschitz=1.0)
+    z, theta, q = 5122, 0.3, 8
+    expect = 1.0 / 2.0 * z * theta**2 / (4.0 * (2.0**8 - 1.0) ** 2)
+    assert downlink_term(c, z, theta, q) == pytest.approx(expect)
+    # monotone: finer broadcast -> smaller term
+    assert downlink_term(c, z, theta, 8) < downlink_term(c, z, theta, 2)
