@@ -18,7 +18,11 @@ the same one-compile scan; the four paper baselines (``no_quant``,
 runs the QCCF-vs-baselines energy/accuracy comparison on one scenario
 (``bench_baseline_energy``). ``--dry-run`` traces + lowers the full scan
 without executing (the CI manual-dispatch job uses this: lowering success is
-the gate, no CPU burn). ``--json`` appends machine-readable rows to
+the gate, no CPU burn). ``--outage-p/--outage-corr/--fade-p/--corrupt-p/
+--nan-p`` build a ``FaultSpec`` and run the scan with in-scan fault
+injection + the graceful-degradation screen; ``--fault-overhead`` runs the
+clean-vs-faulty pair and records the rounds/s overhead of the fault
+machinery (budget <= 10%) plus energy-to-matched-accuracy. ``--json`` appends machine-readable rows to
 ``BENCH_sim.json`` at the repo root (rounds/sec, compile_s, U, C, policy,
 scenario, aggregator) so the perf trajectory across PRs stays recorded.
 
@@ -69,6 +73,7 @@ def bench_fleet_scale(
     ledger=None,
     xprof: str | None = None,
     downlink: str = "off",
+    faults=None,
 ) -> list[tuple]:
     """U-client QCCF rounds in one compiled scan; rows are run.py-style CSV.
 
@@ -101,6 +106,8 @@ def bench_fleet_scale(
     tag = f"U={u},C={c},{task},{scen},{policy}"
     if downlink != "off":
         tag += f",dl={downlink}"
+    if faults is not None and faults.enabled:
+        tag += f",faults=p{faults.outage_p:g}"
     led = ledger if ledger is not None else default_ledger()
     tele = MetricsConfig(enabled=True) if telemetry else None
     rows = []
@@ -109,7 +116,7 @@ def bench_fleet_scale(
             task, scenario=scenario, n_clients=u, n_channels=c, mu=mu,
             beta=beta, seed=seed, batch_size=batch_size, n_test=256,
             policy_mode=policy_mode, ga_config=ga_config, telemetry=tele,
-            downlink=downlink,
+            downlink=downlink, faults=faults,
         )
     led.run_header(
         name=f"sim_fleet[{tag}]", entry="bench_fleet_scale",
@@ -285,6 +292,90 @@ def bench_baseline_energy(
     return rows
 
 
+def bench_fault_overhead(
+    u: int = 1024,
+    n_rounds: int = 20,
+    outage_p: float = 0.1,
+    task: str = "tiny",
+    n_channels: int = 8,
+    mu: float = 100.0,
+    beta: float = 20.0,
+    batch_size: int = 8,
+    seed: int = 0,
+    json_rows: list | None = None,
+    ledger=None,
+) -> list[tuple]:
+    """Clean vs faults-on run of the SAME task/seed/key schedule: the
+    rounds/s cost of the in-scan fault machinery (injection draws + the
+    per-slot screen + realized Lyapunov feedback; budget <= 10% at the
+    U = 1024 fleet scale) and the energy-to-matched-accuracy price of a
+    ``outage_p`` correlated outage process (the fleet spends energy on
+    rounds whose uploads partially never land). Compile time is excluded
+    from both timings (lower+compile split out, as bench_fleet_scale)."""
+    import jax
+    import numpy as np
+    from repro.obs import default_ledger, timed_phase
+    from repro.sim import build_sim
+    from repro.sim.scenario import FaultSpec
+
+    led = ledger if ledger is not None else default_ledger()
+    spec = FaultSpec(outage_p=outage_p, outage_corr=0.5)
+    rows = []
+    results: dict = {}
+    for label, faults in (("clean", None), ("faulty", spec)):
+        tag = f"U={u},C={n_channels},{task},{label}"
+        sim = build_sim(
+            task, n_clients=u, n_channels=n_channels, mu=mu, beta=beta,
+            seed=seed, batch_size=batch_size, n_test=256, faults=faults,
+        )
+        keys, ridx = sim._scan_xs(n_rounds)
+        carry = sim._init_carry()
+        compiled = sim._scan_fn(True).lower(
+            sim._dyn, carry, keys, ridx).compile()
+        with timed_phase("run", led, tag=tag, rounds=n_rounds) as t_run:
+            (flat, *_), out = compiled(sim._dyn, carry, keys, ridx)
+            jax.block_until_ready(flat)
+        results[label] = (
+            t_run.seconds,
+            np.asarray(out["energy"], np.float64),
+            np.asarray(out["accuracy"], np.float64),
+        )
+
+    target_acc = min(float(acc[-1]) for _, _, acc in results.values())
+    clean_s = results["clean"][0]
+    for label, (run_s, energy, acc) in results.items():
+        cum_e = np.cumsum(energy)
+        hit = np.nonzero(acc >= target_acc)[0]
+        r_hit = int(hit[0]) + 1 if hit.size else -1
+        e_hit = float(cum_e[hit[0]]) if hit.size else float(cum_e[-1])
+        overhead = run_s / clean_s - 1.0
+        rows.append((
+            f"sim_faults[{label},U={u},rounds={n_rounds},p={outage_p:g}]",
+            run_s / n_rounds * 1e6,
+            f"rounds_per_s={n_rounds / run_s:.3f}"
+            f";overhead_vs_clean={overhead * 100:.1f}%"
+            f";cum_energy_J={float(cum_e[-1]):.5f}"
+            f";final_acc={float(acc[-1]):.4f};target_acc={target_acc:.4f}"
+            f";rounds_to_target={r_hit};energy_to_target_J={e_hit:.5f}",
+        ))
+        if json_rows is not None:
+            json_rows.append({
+                "name": f"sim_faults[{label},U={u},rounds={n_rounds},"
+                        f"p={outage_p:g}]",
+                "bench": "fault_overhead",
+                "u": u, "c": n_channels, "rounds": n_rounds,
+                "outage_p": (0.0 if label == "clean" else outage_p),
+                "rounds_per_s": round(n_rounds / run_s, 5),
+                "overhead_vs_clean_pct": round(overhead * 100, 2),
+                "cum_energy_J": round(float(cum_e[-1]), 6),
+                "final_acc": round(float(acc[-1]), 5),
+                "target_acc": round(float(target_acc), 5),
+                "rounds_to_target": r_hit,
+                "energy_to_target_J": round(e_hit, 6),
+            })
+    return rows
+
+
 def bench_sim_vs_object(u: int = 8, n_rounds: int = 10) -> list[tuple]:
     """Small-scale sanity row: compiled engine vs the object-based loop
     running the same greedy-KKT policy (see tests/test_sim_parity.py)."""
@@ -366,12 +457,42 @@ def main() -> None:
                     choices=("off", "quant", "delta"),
                     help="quantized server->client broadcast mode for the "
                          "scaling bench (BENCH_sim downlink-on rows)")
+    ap.add_argument("--outage-p", type=float, default=0.0,
+                    help="client outage probability (fault injection)")
+    ap.add_argument("--outage-corr", type=float, default=0.0,
+                    help="Markov outage correlation (0 = i.i.d.)")
+    ap.add_argument("--fade-p", type=float, default=0.0,
+                    help="deep-fade probability (realized-rate faults)")
+    ap.add_argument("--corrupt-p", type=float, default=0.0,
+                    help="per-slot wire corruption probability")
+    ap.add_argument("--nan-p", type=float, default=0.0,
+                    help="NaN/Inf gradient-burst probability")
+    ap.add_argument("--fault-overhead", action="store_true",
+                    help="run the clean-vs-faulty overhead bench (rounds/s "
+                         "cost of the fault machinery + energy-to-target "
+                         "under --outage-p outages) instead of the "
+                         "scaling bench")
     args = ap.parse_args()
     from repro.obs import default_ledger
     ledger = default_ledger(args.ledger)
     print("name,us_per_call,derived", flush=True)
     json_rows: list | None = [] if args.json else None
-    if args.baseline:
+    faults = None
+    if any((args.outage_p, args.fade_p, args.corrupt_p, args.nan_p)):
+        from repro.sim.scenario import FaultSpec
+        faults = FaultSpec(outage_p=args.outage_p,
+                           outage_corr=args.outage_corr,
+                           fade_p=args.fade_p, corrupt_p=args.corrupt_p,
+                           nan_p=args.nan_p)
+    if args.fault_overhead:
+        rows = bench_fault_overhead(
+            u=args.clients, n_rounds=args.rounds,
+            outage_p=args.outage_p or 0.1, task=args.task,
+            n_channels=(args.clients if args.channels == 0 else args.channels),
+            mu=args.mu, beta=args.beta, batch_size=args.batch_size,
+            seed=args.seed, json_rows=json_rows, ledger=ledger,
+        )
+    elif args.baseline:
         rows = bench_baseline_energy(
             u=args.clients, n_rounds=args.rounds,
             scenario=args.scenario or "single_bs", task=args.task,
@@ -392,7 +513,7 @@ def main() -> None:
             ga_generations=args.ga_generations,
             ga_population=args.ga_population, json_rows=json_rows,
             telemetry=args.telemetry, ledger=ledger, xprof=args.xprof,
-            downlink=args.downlink,
+            downlink=args.downlink, faults=faults,
         )
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,1 +1,6 @@
-from repro.ckpt.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.ckpt.checkpoint import (
+    CheckpointError,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)

@@ -1,7 +1,17 @@
 """npz-based pytree checkpointing (offline substrate; no orbax).
 
-Layout: <dir>/step_<N>.npz holding flattened leaves keyed by path, plus a
-JSON sidecar with the treedef paths and metadata. Atomic via temp+rename.
+Layout: ``<dir>/step_<N>.npz`` holding flattened leaves keyed by path,
+plus a JSON sidecar ``step_<N>.npz.json`` with the leaf paths, each
+leaf's shape/dtype, and caller metadata.
+
+Write protocol (crash-safe): the npz is written to a temp file and
+``os.replace``d into place FIRST, then the sidecar the same way. A crash
+mid-save therefore leaves either nothing, a stray ``.tmp`` file, or an
+npz without its sidecar — all three are skipped by :func:`latest_step`,
+so a resumer always lands on the last COMPLETE step. :func:`load_checkpoint`
+validates the sidecar against the npz (key set, per-leaf shape and dtype)
+and raises :class:`CheckpointError` on any mismatch or unreadable file
+instead of handing back a silently-wrong pytree.
 """
 from __future__ import annotations
 
@@ -14,6 +24,11 @@ import jax
 import numpy as np
 
 Pytree = Any
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint on disk is unreadable, incomplete, or inconsistent
+    with its sidecar (or with what the resumer expects)."""
 
 
 def _flatten_with_paths(tree: Pytree, prefix: str = "") -> dict[str, np.ndarray]:
@@ -37,28 +52,51 @@ def _unflatten(flat: dict[str, np.ndarray]) -> Pytree:
     return root
 
 
+def _atomic_write(directory: str, path: str, writer) -> None:
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            writer(f)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
 def save_checkpoint(directory: str, step: int, params: Pytree,
                     extra: Optional[dict] = None) -> str:
     os.makedirs(directory, exist_ok=True)
     flat = _flatten_with_paths(jax.device_get(params))
     path = os.path.join(directory, f"step_{step:08d}.npz")
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        np.savez(f, **flat)
-    os.replace(tmp, path)
-    meta = {"step": step, "keys": sorted(flat), **(extra or {})}
-    with open(path + ".json", "w") as f:
-        json.dump(meta, f)
+    meta = {
+        "step": step,
+        "keys": sorted(flat),
+        "arrays": {k: {"shape": list(flat[k].shape), "dtype": str(flat[k].dtype)}
+                   for k in sorted(flat)},
+        **(extra or {}),
+    }
+    # npz first, sidecar second (both atomic): an incomplete save is an
+    # npz without a sidecar, which latest_step skips.
+    _atomic_write(directory, path, lambda f: np.savez(f, **flat))
+    _atomic_write(
+        directory, path + ".json",
+        lambda f: f.write(json.dumps(meta).encode()),
+    )
     return path
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Largest step with a COMPLETE checkpoint: both the npz and its JSON
+    sidecar present. Stray ``.tmp`` files and sidecar-less npz files
+    (a crash mid-save) are skipped."""
     if not os.path.isdir(directory):
         return None
     steps = [
         int(f[len("step_"):-len(".npz")])
         for f in os.listdir(directory)
         if f.startswith("step_") and f.endswith(".npz")
+        and os.path.exists(os.path.join(directory, f + ".json"))
     ]
     return max(steps) if steps else None
 
@@ -69,8 +107,41 @@ def load_checkpoint(directory: str, step: Optional[int] = None) -> tuple[Pytree,
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
     path = os.path.join(directory, f"step_{step:08d}.npz")
-    with np.load(path) as data:
-        flat = {k: data[k] for k in data.files}
-    with open(path + ".json") as f:
-        meta = json.load(f)
+    try:
+        with np.load(path) as data:
+            flat = {k: data[k] for k in data.files}
+    except FileNotFoundError:
+        raise
+    except Exception as e:  # truncated / corrupted npz
+        raise CheckpointError(f"unreadable checkpoint {path}: {e}") from e
+    try:
+        with open(path + ".json") as f:
+            meta = json.load(f)
+    except FileNotFoundError as e:
+        raise CheckpointError(
+            f"checkpoint {path} has no sidecar (incomplete save?)"
+        ) from e
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointError(f"unreadable sidecar {path}.json: {e}") from e
+
+    keys = meta.get("keys")
+    if keys is not None and sorted(keys) != sorted(flat):
+        raise CheckpointError(
+            f"checkpoint {path}: sidecar keys {sorted(keys)} != npz keys "
+            f"{sorted(flat)}"
+        )
+    for k, spec in (meta.get("arrays") or {}).items():
+        if k not in flat:
+            raise CheckpointError(f"checkpoint {path}: sidecar lists missing leaf {k!r}")
+        arr = flat[k]
+        if list(arr.shape) != list(spec.get("shape", [])):
+            raise CheckpointError(
+                f"checkpoint {path}: leaf {k!r} shape {list(arr.shape)} != "
+                f"sidecar {spec.get('shape')}"
+            )
+        if str(arr.dtype) != spec.get("dtype"):
+            raise CheckpointError(
+                f"checkpoint {path}: leaf {k!r} dtype {arr.dtype} != "
+                f"sidecar {spec.get('dtype')}"
+            )
     return _unflatten(flat), meta

@@ -113,3 +113,37 @@ def downlink_term(
     levels = max(2.0 ** float(q) - 1.0, 1e-12)
     return float(consts.lipschitz / 2.0 * z * float(theta) ** 2
                  / (4.0 * levels**2))
+
+
+def realized_terms(
+    consts: BoundConstants,
+    a_real: np.ndarray,     # (U,) REALIZED participation (post-screen)
+    d_sizes: np.ndarray,    # (U,)
+    g_sq: np.ndarray,       # (U,) normalized G^2 estimates (decision inputs)
+    sigma_sq: np.ndarray,   # (U,)
+    theta_max: np.ndarray,  # (U,) pre-update range estimates
+    q: np.ndarray,          # (U,) executed levels (>= 1 where scheduled)
+    z: int,
+    hetero: np.ndarray | None = None,
+    dl_term: float = 0.0,
+) -> tuple[float, float]:
+    """Eq. 20/21 re-evaluated at the *realized* participation.
+
+    Under fault injection a scheduled slot can fail to deliver (outage,
+    realized timeout, screened payload). The Lyapunov queues must then be
+    fed what actually happened, not what the controller planned: a failed
+    client re-enters the scheduling-exclusion sum ``(1 - a w_full)`` exactly
+    like a client that was never scheduled, and drops out of the round
+    weights ``w_round``. Same inputs the planned terms saw (normalized
+    G^2/sigma^2, pre-update theta_max, the decision's q), only ``a``
+    differs — so with zero realized faults these reduce to the planned
+    terms exactly.
+    """
+    a = np.asarray(a_real, np.float64)
+    d = np.asarray(d_sizes, np.float64)
+    w_full = d / np.sum(d)
+    d_n = float(np.sum(a * d))
+    w_round = a * d / max(d_n, 1e-12)
+    dt = data_term(consts, a, w_full, w_round, g_sq, sigma_sq, hetero)
+    qt = quant_term(consts, w_round, z, theta_max, np.maximum(q, 1))
+    return float(dt), float(qt + dl_term)

@@ -87,7 +87,10 @@ def quantize(
 def _dequant_kernel(idx_ref, sign_ref, scale_ref, out_ref, *, q_bits: int):
     levels = jnp.float32(2.0**q_bits - 1.0)
     scale = scale_ref[0, 0]
-    mag = idx_ref[...].astype(jnp.float32) * (scale / levels)
+    # range sanity: a corrupted index plane (bit flips on the wire) must
+    # dequantize into [-scale, scale], never scale * 255 / levels — clamp to
+    # the level count. A no-op for every index a quantizer can emit.
+    mag = jnp.minimum(idx_ref[...].astype(jnp.float32), levels) * (scale / levels)
     out_ref[...] = jnp.where(sign_ref[...] > 0, -mag, mag)
 
 
@@ -119,6 +122,24 @@ def dequantize(
             out_shape=jax.ShapeDtypeStruct((m, LANES), jnp.float32),
             interpret=interpret,
         )(idx, signs, scale.reshape(1, 1))
+
+
+def plane_in_range(idx: jax.Array, q_bits: jax.Array) -> jax.Array:
+    """Per-client wire-plane range screen: ``max(idx) <= 2^q - 1``.
+
+    ``idx`` is (K, ...) index planes (any trailing layout), ``q_bits`` a
+    scalar or (K,) per-client level (traced ok). A valid quantizer output
+    always passes; an out-of-range index means the plane was corrupted in
+    flight (sim fault injection, or a real wire) and the slot should be
+    screened out of the aggregate rather than clamped silently. Note the
+    check is vacuous at q = 8 for a u8 plane (every byte is a legal index)
+    — pair it with a sign-plane check and a finite-range check, as
+    ``repro.sim.engine.screen_slots`` does.
+    """
+    qf = jnp.maximum(jnp.asarray(q_bits), 1).astype(jnp.float32)
+    levels = 2.0**qf - 1.0
+    flat = idx.reshape(idx.shape[0], -1).astype(jnp.float32)
+    return jnp.max(flat, axis=1) <= levels
 
 
 def _aggregate_kernel(idx_ref, sign_ref, coef_ref, out_ref, *, block_k: int):

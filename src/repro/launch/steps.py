@@ -155,7 +155,7 @@ def lower_decode_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape):
 
 def make_fl_round(
     cfg: ModelConfig, mesh: Mesh, *, lr: float = 1e-3, client_axis: str = "pod",
-    wire_packed: bool = False, downlink: str = "off",
+    wire_packed: bool = False, downlink: str = "off", screen: bool = False,
 ):
     """One FL communication round at pod scale (paper Fig. 1 steps 3-5):
 
@@ -179,6 +179,15 @@ def make_fl_round(
     the identical payload); ``"delta"`` quantizes the round-to-round
     update ``agg - theta^{n-1}`` instead, whose range shrinks as training
     converges, so the same u8 plane carries a finer effective step.
+
+    ``screen``: graceful-degradation aggregation (static gate — False
+    traces the exact unscreened round). Each client's upload is screened
+    before it can touch the aggregate: a non-finite range/payload or an
+    out-of-range u8 index plane marks the client failed, its contribution
+    is zeroed, and the surviving weights are renormalized to preserve the
+    round's total weight. If every client fails, the round degrades to a
+    no-op (params carried forward). The round then returns a trailing
+    ``n_screened`` scalar.
     """
     if downlink not in ("off", "quant", "delta"):
         raise ValueError(
@@ -268,7 +277,35 @@ def make_fl_round(
 
             wire, theta_max = jax.vmap(client_wire)(keys, new_params, qb)
             levels = 2.0 ** qb.astype(jnp.float32) - 1.0
-            coef = weights * theta_max / levels                   # (K,)
+            is_pair = lambda x: (
+                isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
+            )
+            if screen:
+                # wire-plane screen: a client whose range went non-finite
+                # (NaN/Inf local step) or whose u8 index plane exceeds its
+                # 2^q - 1 levels (corruption in flight) must not touch the
+                # aggregate. coef = 0 zeroes its magnitudes (u8 planes are
+                # always finite) and the sanitized range keeps 0 * NaN out
+                # of the coefficient itself.
+                ok = jnp.isfinite(theta_max)
+                for idx_leaf, _ in jax.tree_util.tree_leaves(
+                    wire, is_leaf=is_pair
+                ):
+                    flat = idx_leaf.reshape(idx_leaf.shape[0], -1)
+                    ok = ok & (
+                        jnp.max(flat.astype(jnp.float32), axis=1) <= levels
+                    )
+                okf = ok.astype(jnp.float32)
+                w_eff = weights * okf
+                # renormalize the survivors to the round's total weight —
+                # an exact no-op when every client passes
+                w_use = w_eff * (
+                    jnp.sum(weights) / jnp.maximum(jnp.sum(w_eff), 1e-12)
+                )
+                coef = w_use * jnp.where(ok, theta_max, 0.0) / levels  # (K,)
+                n_screened = jnp.sum(1.0 - okf)
+            else:
+                coef = weights * theta_max / levels                   # (K,)
 
             # The uint8 payload crosses the client axis BEFORE the dequant
             # (an all-gather of u8 shards); the dequant + weighted sum then
@@ -296,19 +333,40 @@ def make_fl_round(
                     out = term if out is None else out + term
                 return out
 
-            is_pair = lambda x: (
-                isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
-            )
             agg = jax.tree_util.tree_map(agg_leaf, wire, is_leaf=is_pair)
         else:
             quantized, theta_max = jax.vmap(
                 lambda k, p, q: quantize_pytree(k, p, q)
             )(keys, new_params, q_bits)
+            if screen:
+                # dequantized fp32 payloads: screen any client with a
+                # non-finite leaf or range, zero its leaves (the einsum
+                # would propagate 0 * NaN = NaN otherwise), renormalize
+                # the survivors to the round's total weight.
+                ok = jnp.isfinite(theta_max)
+                for leaf in jax.tree_util.tree_leaves(quantized):
+                    flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+                    ok = ok & jnp.all(jnp.isfinite(flat), axis=1)
+                okf = ok.astype(jnp.float32)
+                w_eff = weights * okf
+                w_use = w_eff * (
+                    jnp.sum(weights) / jnp.maximum(jnp.sum(w_eff), 1e-12)
+                )
+                quantized = jax.tree_util.tree_map(
+                    lambda l: jnp.where(
+                        ok.reshape((-1,) + (1,) * (l.ndim - 1)), l,
+                        jnp.zeros_like(l),
+                    ),
+                    quantized,
+                )
+                n_screened = jnp.sum(1.0 - okf)
+            else:
+                w_use = weights
             agg = jax.tree_util.tree_map(
                 lambda leaf: jnp.einsum(
                     "k...,k->...",
                     replicate_over_clients(leaf.astype(jnp.float32)),
-                    weights,
+                    w_use,
                 ).astype(leaf.dtype),
                 quantized,
             )
@@ -386,6 +444,15 @@ def make_fl_round(
                     lambda d, c: (c.astype(jnp.float32) + d).astype(c.dtype),
                     deq, client_params,
                 )
+        if screen:
+            # every client screened: the round degrades to a no-op —
+            # carry the start-of-round params forward instead of
+            # broadcasting a zero (or NaN) aggregate.
+            any_ok = n_screened < jnp.float32(n_clients)
+            stacked = jax.tree_util.tree_map(
+                lambda s, c: jnp.where(any_ok, s, c), stacked, client_params,
+            )
+            return stacked, losses.mean(), theta_max, n_screened
         return stacked, losses.mean(), theta_max
 
     return fl_round
@@ -393,12 +460,13 @@ def make_fl_round(
 
 def lower_fl_round(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
                    client_axis: str = "pod", wire_packed: bool = False,
-                   downlink: str = "off"):
+                   downlink: str = "off", screen: bool = False):
     from repro.models import abstract_params
 
     n_clients = mesh.shape[client_axis]
     fl_round = make_fl_round(cfg, mesh, client_axis=client_axis,
-                             wire_packed=wire_packed, downlink=downlink)
+                             wire_packed=wire_packed, downlink=downlink,
+                             screen=screen)
 
     params = abstract_params(cfg)
     stack = lambda t: jax.tree_util.tree_map(
@@ -439,7 +507,7 @@ def lower_fl_round(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
     jitted = jax.jit(
         fl_round,
         in_shardings=(cspecs, bspecs, rep, rep, rep),
-        out_shardings=(cspecs, None, None),
+        out_shardings=(cspecs, None, None) + ((None,) if screen else ()),
         donate_argnums=(0,),
     )
     with activation_mesh(plan):

@@ -30,6 +30,11 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest COMPLETE checkpoint in "
+                         "--ckpt-dir (params restored, optimizer state "
+                         "re-initialized, data stream fast-forwarded); "
+                         "starts fresh if the directory has none")
     ap.add_argument("--fl-interval", type=int, default=0)
     ap.add_argument("--fl-q", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
@@ -67,6 +72,29 @@ def main() -> None:
 
     key = jax.random.PRNGKey(args.seed)
     params = init_params(cfg, key)
+    start_step = 0
+    if args.resume:
+        if not args.ckpt_dir:
+            ap.error("--resume requires --ckpt-dir")
+        from repro.ckpt import latest_step, load_checkpoint
+
+        last = latest_step(args.ckpt_dir)
+        if last is None:
+            print(f"--resume: no complete checkpoint in {args.ckpt_dir}; "
+                  "starting fresh", flush=True)
+        else:
+            # load_checkpoint validates the sidecar (keys/shapes/dtypes)
+            # and raises CheckpointError rather than resuming from a
+            # half-written or mismatched step
+            tree, meta = load_checkpoint(args.ckpt_dir, last)
+            params = jax.tree_util.tree_map(
+                lambda ref, arr: jnp.asarray(arr, ref.dtype), params, tree
+            )
+            start_step = int(meta["step"])
+            ledger.write("resume", step=start_step, action="load",
+                         dir=str(args.ckpt_dir))
+            print(f"resumed from step {start_step} ({args.ckpt_dir})",
+                  flush=True)
     opt_state = opt.init(params)
     # place params/optimizer through the logical-axis plan (a no-op on the
     # 1x1 host mesh; FSDP+TP placement on a real slice)
@@ -82,8 +110,20 @@ def main() -> None:
     b, s = args.batch, args.seq
     import contextlib
     prof = contextlib.ExitStack()
+    # fast-forward the data stream (and the fl key schedule) over the
+    # already-trained steps so a resumed run sees the same batch a fresh
+    # run would at the same step index
+    for i in range(start_step):
+        rng.integers(0, cfg.vocab, (b, s))
+        if cfg.family == "encdec":
+            rng.normal(size=(b, s, cfg.d_model))
+        if cfg.family == "vlm":
+            rng.normal(size=(b, cfg.n_vis_tokens, cfg.d_model))
+        if args.fl_interval and (i + 1) % args.fl_interval == 0:
+            key, _, _ = jax.random.split(key, 3)
+    metrics = None
     t0 = time.time()
-    for i in range(args.steps):
+    for i in range(start_step, args.steps):
         toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
         batch = {"tokens": toks, "labels": toks, "mask": jnp.ones((b, s))}
         if cfg.family == "encdec":
@@ -93,7 +133,7 @@ def main() -> None:
             batch["vis_embeds"] = jnp.asarray(
                 rng.normal(size=(b, cfg.n_vis_tokens, cfg.d_model)), jnp.float32)
         params, opt_state, metrics = step(params, opt_state, batch)
-        if i == 0:
+        if i == start_step:
             jax.block_until_ready(metrics["loss"])
             ledger.timing("first_step", time.time() - t0,
                           entry="launch.train", note="includes compile")
@@ -102,7 +142,8 @@ def main() -> None:
         if i % 10 == 0 or i == args.steps - 1:
             print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
-                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+                  f"({(time.time()-t0)/(i-start_step+1):.2f}s/step)",
+                  flush=True)
         if args.fl_interval and (i + 1) % args.fl_interval == 0:
             # paper eq. 2 on 2 virtual clients: quantize + weighted-average
             key, k1, k2 = jax.random.split(key, 3)
@@ -120,6 +161,10 @@ def main() -> None:
                                    extra={"loss": float(metrics["loss"])})
             print(f"  saved {path}", flush=True)
     prof.close()
+    if metrics is None:
+        print(f"nothing to do: resumed step {start_step} >= --steps "
+              f"{args.steps}", flush=True)
+        return
     ledger.timing("train_loop", time.time() - t0, entry="launch.train",
                   steps=args.steps,
                   final_loss=float(metrics["loss"]))

@@ -24,6 +24,14 @@ Event kinds
 ``record``      a free-form record from a sweep (e.g. one
                 ``launch.dryrun`` combo) — payload is preserved as-is
                 under ``"payload"``.
+``resume``      one per segmented-scan checkpoint boundary: the step
+                (next round index) and whether the carry was saved
+                (``action="save"``) or restored (``action="load"``).
+
+Telemetry must never kill a run: a failed append is retried once (the
+transient-NFS / fd-exhaustion case) and then the ledger degrades to the
+null sink with a single ``RuntimeWarning`` — the experiment keeps its
+results, it just loses its log.
 
 ``Ledger(None)`` is the null sink (every write is a no-op), so call sites
 never branch on "is telemetry configured". ``default_ledger()`` reads the
@@ -51,6 +59,7 @@ EVENT_FIELDS: dict[str, tuple[str, ...]] = {
     "timing": ("phase", "seconds"),
     "hlo": ("source", "payload"),
     "record": ("source", "payload"),
+    "resume": ("step", "action"),
 }
 _ENVELOPE = ("schema", "event", "run_id", "ts")
 
@@ -152,12 +161,37 @@ class Ledger:
             **_sanitize(fields),
         }
         validate_event(ev)
+        line = json.dumps(ev) + "\n"
+        # Telemetry must never kill a run: retry a failed append once (a
+        # transient OSError — NFS hiccup, fd exhaustion), then degrade to
+        # the null sink with one warning instead of raising into the
+        # experiment. Malformed events above still raise — that is a
+        # caller bug, not an I/O fault.
+        try:
+            self._append(line)
+        except OSError:
+            time.sleep(0.05)
+            try:
+                self._append(line)
+            except OSError as e:
+                import warnings
+
+                warnings.warn(
+                    f"ledger write to {self.path!r} failed twice ({e}); "
+                    "disabling ledger for the rest of this run",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                self.path = None
+                return None
+        return ev
+
+    def _append(self, line: str) -> None:
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
         with open(self.path, "a") as f:
-            f.write(json.dumps(ev) + "\n")
-        return ev
+            f.write(line)
 
     # ------------------------------------------------ typed conveniences
 

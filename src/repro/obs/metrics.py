@@ -75,6 +75,9 @@ class RoundMetrics:
     ga_median: Any      # final-generation median population J0 (NaN likewise)
     dl_payload_bits: Any  # downlink broadcast payload (NaN when downlink off)
     dl_mse: Any         # ||broadcast - exact aggregate||^2 / Z (NaN if off/untapped)
+    n_dropped: Any      # scheduled slots lost to client outage (NaN when faults off)
+    n_screened: Any     # all scheduled-but-failed slots: outage + realized timeout + corrupt/non-finite (NaN likewise)
+    n_timeout_real: Any # planned successes turned realized timeouts by fades (NaN likewise)
 
 
 jax.tree_util.register_dataclass(
@@ -142,6 +145,7 @@ def decision_metrics(
         q_mean=q_mean, q_max=q_max, q_cont_mean=qc_mean,
         quant_mse=nan, corr_q_d=corr, ga_best=nan, ga_median=nan,
         dl_payload_bits=nan, dl_mse=nan,
+        n_dropped=nan, n_screened=nan, n_timeout_real=nan,
     )
 
 
@@ -159,6 +163,9 @@ def decision_metrics_host(
     ga_median: Optional[float] = None,
     dl_payload_bits: Optional[float] = None,
     dl_mse: Optional[float] = None,
+    n_dropped: Optional[float] = None,
+    n_screened: Optional[float] = None,
+    n_timeout_real: Optional[float] = None,
 ) -> dict:
     """Host replay of :func:`decision_metrics`: the SAME jitted function on
     f32-cast arrays, so every field whose inputs are exact across engines
@@ -181,6 +188,12 @@ def decision_metrics_host(
         out["dl_payload_bits"] = float(dl_payload_bits)
     if dl_mse is not None:
         out["dl_mse"] = float(dl_mse)
+    if n_dropped is not None:
+        out["n_dropped"] = float(n_dropped)
+    if n_screened is not None:
+        out["n_screened"] = float(n_screened)
+    if n_timeout_real is not None:
+        out["n_timeout_real"] = float(n_timeout_real)
     return out
 
 

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
+from repro.core import bounds
 from repro.core import quantization as core_quant
 from repro.core.genetic import GAConfig, RoundContext, SystemParams
 from repro.obs import ledger as obs_ledger
@@ -66,7 +67,7 @@ from repro.sim.fleet import (
     Fleet, build_fleet, ema_update, fleet_local_sgd, gather_active,
     scatter_slots,
 )
-from repro.sim.scenario import Scenario, get_scenario
+from repro.sim.scenario import FAULTS_OFF, FaultSpec, Scenario, get_scenario
 from repro.wireless.channel import ChannelModel, ChannelParams
 
 Pytree = Any
@@ -83,6 +84,108 @@ PROBE_KEY_TAG = 8
 # so switching the downlink on never perturbs the channel/batch/uplink
 # uniforms and downlink-off runs stay bit-identical to the two-leg engine.
 DOWNLINK_KEY_TAG = 13
+# fold_in tag deriving the per-round fault stream (outage / fade / wire
+# corruption / gradient bursts, see scenario.FaultSpec) from the ROUND key:
+# its own stream, so switching faults on never perturbs the
+# channel/batch/uplink/downlink/GA uniforms — faults-off runs stay
+# bit-identical to the fault-free engine, and run_host_policy replays the
+# draws bit for bit by folding the same tag.
+FAULT_KEY_TAG = 17
+
+
+def fault_keys(round_key: jax.Array):
+    """(k_outage, k_fade, k_corrupt, k_burst) for one round — the shared
+    traced/eager derivation both engines use."""
+    return jax.random.split(jax.random.fold_in(round_key, FAULT_KEY_TAG), 4)
+
+
+def draw_outage(k_out: jax.Array, out_state: jax.Array, fv: jax.Array):
+    """(U,) bool outage draw from the (optionally Markov) client process.
+
+    ``out_state`` is the carried previous-round state (1.0 = was down);
+    ``fv`` the dyn fault vector. P(down | was down) = p + corr (1 - p),
+    P(down | was up) = p (1 - corr): corr = 0 is exactly i.i.d. and the
+    stationary outage rate is p for any corr.
+    """
+    p, corr = fv[0], fv[1]
+    thresh = jnp.where(out_state > 0, p + corr * (1.0 - p), p * (1.0 - corr))
+    return jax.random.uniform(k_out, out_state.shape) < thresh
+
+
+def draw_fade(k_fade: jax.Array, n_clients: int, fv: jax.Array):
+    """((U,) bool fade hit, (U,) realized-rate multiplier: fade_mult where
+    hit, 1.0 elsewhere)."""
+    hit = jax.random.uniform(k_fade, (n_clients,)) < fv[2]
+    return hit, jnp.where(hit, fv[3], 1.0)
+
+
+def inject_burst(k_burst: jax.Array, slots: jax.Array, flat_s: jax.Array,
+                 fv: jax.Array):
+    """NaN/Inf gradient bursts: with prob nan_p a scheduled slot's local
+    update is replaced (half the bursts NaN, half +Inf) BEFORE the wire, so
+    its range scalar theta is non-finite and the screen rejects it."""
+    u01 = jax.random.uniform(k_burst, (flat_s.shape[0],))
+    hit = (u01 < fv[6]) & (slots >= 0)
+    val = jnp.where(u01 < 0.5 * fv[6], jnp.float32(jnp.nan),
+                    jnp.float32(jnp.inf))
+    return jnp.where(hit[:, None], val[:, None], flat_s)
+
+
+def corrupt_planes(k_corr: jax.Array, idx: jax.Array, signs: jax.Array,
+                   fv: jax.Array):
+    """Wire corruption: with prob corrupt_p a slot's index + sign planes
+    get a corrupt_frac fraction of entries XORed with random bytes (same
+    flip sites and bytes for both planes — one event corrupts the slot's
+    wire). Detected by the range screen (index > 2^q - 1 / sign byte > 1);
+    an undetected index flip still lands inside [-theta, theta] through the
+    clamped dequantizer."""
+    k_hit, k_site, k_bits = jax.random.split(k_corr, 3)
+    hit = jax.random.uniform(k_hit, (idx.shape[0],)) < fv[4]
+    site = jax.random.uniform(k_site, idx.shape) < fv[5]
+    flip = hit[:, None] & site
+    bits = jax.random.randint(k_bits, idx.shape, 0, 256, jnp.int32)
+    idx_c = jnp.where(flip, jnp.bitwise_xor(idx.astype(jnp.int32), bits),
+                      idx.astype(jnp.int32)).astype(idx.dtype)
+    signs_c = jnp.where(flip, jnp.bitwise_xor(signs.astype(jnp.int32), bits),
+                        signs.astype(jnp.int32)).astype(signs.dtype)
+    return idx_c, signs_c
+
+
+def screen_slots(slots, q_slot, d_slot, v_slot, f_slot, theta, idx, signs,
+                 down_u, fade_mult_u, fade_hit_u, sysp, z):
+    """The graceful-degradation screen: per-slot delivery verdict + fault
+    counters, shared verbatim by the scan body and the host-replay
+    executor (bit-for-bit replay).
+
+    A slot delivers iff it was scheduled AND not in outage AND its realized
+    (fade-scaled) round time meets t_max AND its range scalar is finite AND
+    its wire planes pass the range check (index <= 2^q - 1, sign byte <=
+    1). The latency arithmetic mirrors ``policy.finish_decision`` with the
+    fade multiplier on the assigned rate, so an un-faded slot can never be
+    screened as a timeout (the planned decision already enforced t_max).
+
+    Returns ``(ok, n_dropped, n_timeout_real, n_screened)`` — n_screened
+    counts every scheduled-but-failed slot (outage + realized timeout +
+    corrupt/non-finite payloads).
+    """
+    sm = slots >= 0
+    cid = jnp.maximum(slots, 0)
+    drop = jnp.take(down_u, cid) & sm
+    f_hit = jnp.take(fade_hit_u, cid) & sm
+    mult = jnp.take(fade_mult_u, cid)
+    qf = jnp.maximum(q_slot, 1).astype(jnp.float32)
+    t_com = (z * qf + z + fast_policy.RANGE_BITS) / jnp.maximum(
+        v_slot * mult, 1e-6)
+    t_cmp = sysp.tau_e * sysp.gamma * d_slot / jnp.maximum(f_slot, 1.0)
+    timeout = f_hit & (t_cmp + t_com > sysp.t_max)
+    plane_ok = sq.plane_in_range(idx, q_slot) & (
+        jnp.max(signs, axis=1) <= 1)
+    ok = sm & ~drop & ~timeout & jnp.isfinite(theta) & plane_ok
+    f32 = jnp.float32
+    return (ok,
+            jnp.sum(drop.astype(f32)),
+            jnp.sum(timeout.astype(f32)),
+            jnp.sum((sm & ~ok).astype(f32)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -239,6 +342,7 @@ class FleetSim:
         telemetry: Optional[MetricsConfig] = None,
         ledger: Optional[obs_ledger.Ledger] = None,
         downlink: Optional[DownlinkConfig] = None,
+        faults: Optional[FaultSpec] = None,
     ) -> None:
         flat0, unravel = ravel_pytree(init_params)
         self.flat0 = flat0.astype(jnp.float32)
@@ -294,6 +398,13 @@ class FleetSim:
         # Downlink wire (static gate like the metrics config): "off" keeps
         # the 6-tuple carry and the byte-identical pre-downlink trace.
         self.downlink = DOWNLINK_OFF if downlink is None else downlink
+        # Fault injection (static gate, scenario.FaultSpec): all-zero rates
+        # trace the fault-free engine byte for byte; when enabled only the
+        # VALUES ride dyn["faults"], so a fault-rate sweep shares one
+        # compiled scan (tests/test_sim_faults.py gates both).
+        self.faults = FAULTS_OFF if faults is None else faults
+        if self.faults.enabled:
+            self._dyn["faults"] = jnp.asarray(self.faults.dyn_vector())
         self._compiled: dict = {}
 
     # ------------------------------------------------------------ round body
@@ -348,15 +459,28 @@ class FleetSim:
         return bcast, dl_next
 
     def _round_body(self, dyn, carry, xs, with_eval: bool):
+        flat, g_sq, sigma_sq, theta_max, lam1, lam2 = carry[:6]
+        tail = 6
+        dl_prev = None
+        out_state = None
         if self.downlink.enabled:
             # 7th carry slot: last round's realized downlink bound term
-            flat, g_sq, sigma_sq, theta_max, lam1, lam2, dl_prev = carry
-        else:
-            flat, g_sq, sigma_sq, theta_max, lam1, lam2 = carry
-            dl_prev = None
+            dl_prev = carry[tail]
+            tail += 1
+        if self.faults.enabled:
+            # trailing carry slot: the (U,) Markov outage state (1.0 = the
+            # client was in outage last round), see scenario.FaultSpec
+            out_state = carry[tail]
         key, ridx = xs
         k_ch, k_batch, k_quant = jax.random.split(key, 3)
         sysp, z = self.sysp, self.z
+        if self.faults.enabled:
+            fv = dyn["faults"]
+            k_out, k_fade, k_corr, k_burst = fault_keys(key)
+            down_u = draw_outage(k_out, out_state, fv)
+            fade_hit_u, fade_mult_u = draw_fade(
+                k_fade, self.fleet.n_clients, fv)
+            new_out_state = down_u.astype(jnp.float32)
 
         rates = sim_channel.draw_rates(
             k_ch, self.channel.params, dyn["distances"],
@@ -442,14 +566,33 @@ class FleetSim:
             x_s, y_s, n_s, self.lr, k_batch,
         )
         flat_s = jax.vmap(lambda p: ravel_pytree(p)[0])(stacked)  # (S, Z)
+        if self.faults.enabled:
+            flat_s = inject_burst(k_burst, slots, flat_s, fv)
 
         q_slot = jnp.take(dec.q, cid) * sm.astype(jnp.int32)
         idx, signs, theta = _quantize_wire(
             k_quant, flat_s, q_slot, self.q_cap, self._zpad
         )
         d_slot = jnp.take(d_sizes, cid) * sm.astype(jnp.float32)
-        d_n = jnp.sum(d_slot)
-        w_slot = d_slot / jnp.maximum(d_n, 1e-12)          # eq. 2 weights
+        if self.faults.enabled:
+            # wire corruption, then the graceful-degradation screen: a
+            # screened slot's weight AND payload are zeroed (theta = NaN
+            # with w = 0 would still poison the aggregate coefficient) and
+            # the eq.-2 weights renormalize over the survivors.
+            idx, signs = corrupt_planes(k_corr, idx, signs, fv)
+            v_slot = jnp.take(dec.v_assigned, cid) * sm.astype(jnp.float32)
+            f_slot = jnp.take(dec.f, cid) * sm.astype(jnp.float32)
+            ok, n_dropped, n_timeout_real, n_screened = screen_slots(
+                slots, q_slot, d_slot, v_slot, f_slot, theta, idx, signs,
+                down_u, fade_mult_u, fade_hit_u, sysp, z,
+            )
+            theta = jnp.where(ok, theta, 0.0)
+            flat_s = jnp.where(ok[:, None], flat_s, 0.0)
+            d_eff = d_slot * ok.astype(jnp.float32)
+        else:
+            d_eff = d_slot
+        d_n = jnp.sum(d_eff)
+        w_slot = d_eff / jnp.maximum(d_n, 1e-12)           # eq. 2 weights
         agg = self._aggregate(idx, signs, theta, w_slot, q_slot)
         new_flat = jnp.where(d_n > 0, agg[: self.z], flat)
         if self.downlink.enabled:
@@ -459,13 +602,39 @@ class FleetSim:
             exact_flat = new_flat
             new_flat, dl_next = self._downlink_apply(key, new_flat, flat)
 
-        g_sq = ema_update(g_sq, scatter_slots(slots, g_obs, u), dec.a)
-        sigma_sq = ema_update(sigma_sq, scatter_slots(slots, s_obs, u),
-                              dec.a, floor=1e-8)
-        theta_max = jnp.where(dec.a > 0, scatter_slots(slots, theta, u),
-                              theta_max)
-        lam1 = jnp.maximum(lam1 + dec.data_term - dyn["eps"][0], 0.0)
-        lam2 = jnp.maximum(lam2 + dec.quant_term - dyn["eps"][1], 0.0)
+        if self.faults.enabled:
+            # graceful degradation, server side: only delivered slots feed
+            # the G^2 / sigma^2 / theta estimators, and the Lyapunov queues
+            # get the REALIZED eq.-20/21 terms — a scheduled-but-failed
+            # client re-enters the scheduling-exclusion sum exactly like an
+            # unscheduled one, so the controller adapts q and scheduling to
+            # the observed outage rate. Same hetero / downlink routing as
+            # the decision (the baselines stay queue-blind there too).
+            a_real_u = scatter_slots(slots, ok.astype(jnp.float32), u)
+            use_ctx = mode in ("greedy", "compiled-ga")
+            dt_real, qt_real = fast_policy.realized_terms(
+                a_real_u, d_sizes, g_n, s_n, theta_max, dec.q, sysp, z,
+                hetero=dyn["hetero"] if use_ctx else None,
+                dl_term=dl_prev if use_ctx else None,
+            )
+            g_sq = ema_update(
+                g_sq, scatter_slots(slots, jnp.where(ok, g_obs, 0.0), u),
+                a_real_u)
+            sigma_sq = ema_update(
+                sigma_sq, scatter_slots(slots, jnp.where(ok, s_obs, 0.0), u),
+                a_real_u, floor=1e-8)
+            theta_max = jnp.where(a_real_u > 0,
+                                  scatter_slots(slots, theta, u), theta_max)
+            lam1 = jnp.maximum(lam1 + dt_real - dyn["eps"][0], 0.0)
+            lam2 = jnp.maximum(lam2 + qt_real - dyn["eps"][1], 0.0)
+        else:
+            g_sq = ema_update(g_sq, scatter_slots(slots, g_obs, u), dec.a)
+            sigma_sq = ema_update(sigma_sq, scatter_slots(slots, s_obs, u),
+                                  dec.a, floor=1e-8)
+            theta_max = jnp.where(dec.a > 0, scatter_slots(slots, theta, u),
+                                  theta_max)
+            lam1 = jnp.maximum(lam1 + dec.data_term - dyn["eps"][0], 0.0)
+            lam2 = jnp.maximum(lam2 + dec.quant_term - dyn["eps"][1], 0.0)
 
         if with_eval:
             acc, loss = self.eval_fn(new_flat)
@@ -513,11 +682,18 @@ class FleetSim:
                 if mcfg.quant_mse:
                     dl_mse = jnp.sum((new_flat - exact_flat) ** 2) / self.z
                     rm = dataclasses.replace(rm, dl_mse=dl_mse)
+            if self.faults.enabled:
+                rm = dataclasses.replace(
+                    rm, n_dropped=n_dropped, n_screened=n_screened,
+                    n_timeout_real=n_timeout_real,
+                )
             out["metrics"] = rm
+        new_carry = (new_flat, g_sq, sigma_sq, theta_max, lam1, lam2)
         if self.downlink.enabled:
-            return (new_flat, g_sq, sigma_sq, theta_max, lam1, lam2,
-                    dl_next), out
-        return (new_flat, g_sq, sigma_sq, theta_max, lam1, lam2), out
+            new_carry = new_carry + (dl_next,)
+        if self.faults.enabled:
+            new_carry = new_carry + (new_out_state,)
+        return new_carry, out
 
     # ---------------------------------------------------------------- runs
 
@@ -533,6 +709,9 @@ class FleetSim:
         )
         if self.downlink.enabled:
             carry = carry + (jnp.float32(0.0),)  # dl_prev: no broadcast yet
+        if self.faults.enabled:
+            # Markov outage state: every client starts up
+            carry = carry + (jnp.zeros((u,), jnp.float32),)
         return carry
 
     def _scan_xs(self, n_rounds: int):
@@ -562,12 +741,80 @@ class FleetSim:
             self._dyn, self._init_carry(), keys, ridx
         )
 
-    def run_compiled(self, n_rounds: int, with_eval: bool = True) -> SimResult:
+    def _np_out(self, out) -> dict:
+        """Scan ys pytree -> plain nested numpy dict (telemetry flattened
+        to a {field: (N,)} sub-dict) — the segment / checkpoint / result
+        interchange format."""
+        d = {k: np.asarray(v) for k, v in out.items() if k != "metrics"}
+        if "metrics" in out:
+            d["metrics"] = {
+                k: np.asarray(v)
+                for k, v in obs_metrics.metrics_to_dict(out["metrics"]).items()
+            }
+        return d
+
+    @staticmethod
+    def _concat_out(parts: list) -> dict:
+        """Concatenate per-segment ``_np_out`` dicts along the round axis."""
+        first = parts[0]
+        if len(parts) == 1:
+            return first
+        out: dict = {}
+        for k, v in first.items():
+            if isinstance(v, dict):
+                out[k] = {kk: np.concatenate([p[k][kk] for p in parts])
+                          for kk in v}
+            else:
+                out[k] = np.concatenate([p[k] for p in parts])
+        return out
+
+    def _result_from_out(self, o: dict) -> SimResult:
+        return SimResult(
+            name=self.name,
+            energy=np.asarray(o["energy"], np.float64),
+            accuracy=np.asarray(o["accuracy"], np.float64),
+            loss=np.asarray(o["loss"], np.float64),
+            n_scheduled=np.asarray(o["n_scheduled"]),
+            q_levels=np.asarray(o["q_levels"]),
+            latency=np.asarray(o["latency"], np.float64),
+            payload_bits=np.asarray(o["payload_bits"], np.float64),
+            rates=np.asarray(o["rates"], np.float64),
+            lambda1=np.asarray(o["lambda1"], np.float64),
+            lambda2=np.asarray(o["lambda2"], np.float64),
+            metrics=(dict(o["metrics"]) if "metrics" in o else None),
+        )
+
+    def _write_run_ledger(self, entry: str, n_rounds: int, res: SimResult,
+                          run_s: float) -> None:
+        if not self.ledger.enabled:
+            return
+        self._ledger_header(entry, n_rounds)
+        for n in range(n_rounds):
+            self.ledger.round_row(n, **self._ledger_row(res, n))
+        self.ledger.timing("run", run_s, entry=entry, rounds=int(n_rounds))
+
+    def run_compiled(self, n_rounds: int, with_eval: bool = True,
+                     segment: Optional[int] = None,
+                     ckpt_dir: Optional[str] = None) -> SimResult:
         """The one-scan path: every round traced into one jitted scan
-        (every policy mode except "host-ga")."""
+        (every policy mode except "host-ga").
+
+        ``segment=k`` runs the experiment as ceil(n/k) k-round scan
+        segments instead (same compiled body, same keys — the trajectory is
+        bit-for-bit the unsegmented scan's); with ``ckpt_dir`` the full
+        carry + rounds-so-far checkpoint through ``repro.ckpt`` at every
+        interior segment boundary, and :meth:`resume_compiled` restarts a
+        crashed run from the latest checkpoint mid-experiment.
+        """
         assert self.policy_mode != "host-ga", (
             "host-ga decides on the host per round; use run() / run_host_policy"
         )
+        if segment is not None:
+            assert segment >= 1, segment
+            return self._run_segments(n_rounds, with_eval, int(segment),
+                                      ckpt_dir)
+        if ckpt_dir is not None:
+            raise ValueError("ckpt_dir requires segment=k (segmented scan)")
         fn = self._compiled.get(with_eval)
         if fn is None:
             fn = self._compiled[with_eval] = self._scan_fn(with_eval)
@@ -577,30 +824,97 @@ class FleetSim:
         jax.block_until_ready(out["energy"])
         run_s = time.perf_counter() - t0
         self.final_flat = flat
-        metrics = None
-        if self.metrics_cfg.enabled:
-            metrics = obs_metrics.metrics_to_dict(out["metrics"])
-        res = SimResult(
-            name=self.name,
-            energy=np.asarray(out["energy"], np.float64),
-            accuracy=np.asarray(out["accuracy"], np.float64),
-            loss=np.asarray(out["loss"], np.float64),
-            n_scheduled=np.asarray(out["n_scheduled"]),
-            q_levels=np.asarray(out["q_levels"]),
-            latency=np.asarray(out["latency"], np.float64),
-            payload_bits=np.asarray(out["payload_bits"], np.float64),
-            rates=np.asarray(out["rates"], np.float64),
-            lambda1=np.asarray(out["lambda1"], np.float64),
-            lambda2=np.asarray(out["lambda2"], np.float64),
-            metrics=metrics,
-        )
-        if self.ledger.enabled:
-            self._ledger_header("run_compiled", n_rounds)
-            for n in range(n_rounds):
-                self.ledger.round_row(n, **self._ledger_row(res, n))
-            self.ledger.timing("run", run_s, entry="run_compiled",
-                               rounds=int(n_rounds))
+        res = self._result_from_out(self._np_out(out))
+        self._write_run_ledger("run_compiled", n_rounds, res, run_s)
         return res
+
+    def _run_segments(self, n_rounds: int, with_eval: bool, segment: int,
+                      ckpt_dir: Optional[str], *, start: int = 0,
+                      carry=None, parts: Optional[list] = None,
+                      entry: str = "run_compiled") -> SimResult:
+        """k-round scan segments over the SAME xs schedule as the one-shot
+        scan: the full n_rounds key split is sliced per segment and the
+        carry threads through unchanged, so the trajectory is bit-for-bit
+        the unsegmented scan's (each distinct segment length compiles
+        once — at most two: k and the remainder)."""
+        from repro import ckpt as repro_ckpt
+
+        fn = self._compiled.get(with_eval)
+        if fn is None:
+            fn = self._compiled[with_eval] = self._scan_fn(with_eval)
+        keys, ridx = self._scan_xs(n_rounds)
+        carry = self._init_carry() if carry is None else carry
+        parts = [] if parts is None else list(parts)
+        t0 = time.perf_counter()
+        for b in range(start, n_rounds, segment):
+            e = min(b + segment, n_rounds)
+            carry, out = fn(self._dyn, carry, keys[b:e], ridx[b:e])
+            jax.block_until_ready(out["energy"])
+            parts.append(self._np_out(out))
+            if ckpt_dir is not None and e < n_rounds:
+                tree = {
+                    "carry": {f"c{i:02d}": np.asarray(leaf)
+                              for i, leaf in enumerate(carry)},
+                    "out": self._concat_out(parts),
+                }
+                repro_ckpt.save_checkpoint(ckpt_dir, e, tree, extra={
+                    "kind": "sim_segment", "next_round": int(e),
+                    "n_rounds": int(n_rounds), "segment": int(segment),
+                    "with_eval": bool(with_eval), "seed": self.seed,
+                    "dyn_hash": obs_ledger.pytree_hash(self._dyn),
+                    "sim_name": self.name,
+                })
+                if self.ledger.enabled:
+                    self.ledger.write("resume", step=int(e), action="save",
+                                      dir=str(ckpt_dir))
+        run_s = time.perf_counter() - t0
+        self.final_flat = carry[0]
+        res = self._result_from_out(self._concat_out(parts))
+        self._write_run_ledger(entry, n_rounds, res, run_s)
+        return res
+
+    def resume_compiled(self, ckpt_dir: str) -> SimResult:
+        """Restart a segmented :meth:`run_compiled` from its latest
+        checkpoint: validates the checkpoint against this sim (seed +
+        dynamic-leaf hash + carry arity), restores the scan carry and the
+        rounds already run, and finishes the remaining segments on the same
+        key schedule — the returned trajectories are bit-for-bit the
+        unsegmented scan's (gated in tests/test_sim_faults.py)."""
+        from repro import ckpt as repro_ckpt
+
+        tree, meta = repro_ckpt.load_checkpoint(ckpt_dir)
+        if meta.get("kind") != "sim_segment":
+            raise repro_ckpt.CheckpointError(
+                f"{ckpt_dir!r} holds a {meta.get('kind') or 'non-sim'} "
+                "checkpoint, not a segmented-scan one"
+            )
+        if int(meta["seed"]) != self.seed:
+            raise repro_ckpt.CheckpointError(
+                f"checkpoint seed {meta['seed']} != sim seed {self.seed}"
+            )
+        dyn_hash = obs_ledger.pytree_hash(self._dyn)
+        if meta.get("dyn_hash") != dyn_hash:
+            raise repro_ckpt.CheckpointError(
+                "checkpoint was taken under different dynamic scenario "
+                f"leaves (hash {meta.get('dyn_hash')} != {dyn_hash})"
+            )
+        carry_d = tree["carry"]
+        carry = tuple(jnp.asarray(carry_d[k]) for k in sorted(carry_d))
+        n_ref = len(self._init_carry())
+        if len(carry) != n_ref:
+            raise repro_ckpt.CheckpointError(
+                f"carry has {len(carry)} slots, this sim needs {n_ref} "
+                "(the downlink/faults gates must match the checkpointing sim)"
+            )
+        if self.ledger.enabled:
+            self.ledger.write("resume", step=int(meta["next_round"]),
+                              action="load", dir=str(ckpt_dir))
+        return self._run_segments(
+            int(meta["n_rounds"]), bool(meta["with_eval"]),
+            int(meta["segment"]), ckpt_dir,
+            start=int(meta["next_round"]), carry=carry,
+            parts=[tree["out"]], entry="resume_compiled",
+        )
 
     # ------------------------------------------------------------- ledger
 
@@ -695,15 +1009,31 @@ class FleetSim:
         realized next-round bound term (plus the dl MSE when tapped) ride
         the return tuple, so ``run_host_policy`` can feed the policy the
         identical ``dl_term`` stream.
+
+        With faults on, ``wd_slot`` carries the per-slot DATA SIZES instead
+        of the eq.-2 weights (the weights renormalize over the screened
+        survivors *inside*, with the scan's own f32 arithmetic), the extra
+        ``v_slot``/``f_slot``/``out_state`` inputs feed the screen, and the
+        per-slot verdict + new outage state + fault counters ride the
+        return tuple — the replayed draws and screens are bit-for-bit the
+        scan's (same ``fault_keys`` fold, same ``screen_slots`` ops).
         """
         tap_mse = self.metrics_cfg.enabled and self.metrics_cfg.quant_mse
         dl_on = self.downlink.enabled
+        faults_on = self.faults.enabled
+        fv = self._dyn.get("faults")
+        u = self.fleet.n_clients
 
         @jax.jit
-        def exec_round(flat, slots, q_slot, w_slot, key):
+        def exec_round(flat, slots, q_slot, wd_slot, key,
+                       v_slot=None, f_slot=None, out_state=None):
             # identical key discipline to _round_body (k_ch unused: the
             # caller already drew the rates)
             _k_ch, k_batch, k_quant = jax.random.split(key, 3)
+            if faults_on:
+                k_out, k_fade, k_corr, k_burst = fault_keys(key)
+                down_u = draw_outage(k_out, out_state, fv)
+                fade_hit_u, fade_mult_u = draw_fade(k_fade, u, fv)
             params = self.unravel(flat)
             x_s, y_s, n_s = gather_active(self.fleet, slots)
             stacked, g_obs, s_obs = fleet_local_sgd(
@@ -711,11 +1041,33 @@ class FleetSim:
                 x_s, y_s, n_s, self.lr, k_batch,
             )
             flat_s = jax.vmap(lambda p: ravel_pytree(p)[0])(stacked)
+            if faults_on:
+                flat_s = inject_burst(k_burst, slots, flat_s, fv)
             idx, signs, theta = _quantize_wire(
                 k_quant, flat_s, q_slot, self.q_cap, self._zpad
             )
-            agg = self._aggregate(idx, signs, theta, w_slot, q_slot)
-            new_flat = jnp.where(jnp.sum(w_slot) > 0, agg[: self.z], flat)
+            if faults_on:
+                d_slot = wd_slot
+                idx, signs = corrupt_planes(k_corr, idx, signs, fv)
+                ok, n_dropped, n_timeout_real, n_screened = screen_slots(
+                    slots, q_slot, d_slot, v_slot, f_slot, theta, idx,
+                    signs, down_u, fade_mult_u, fade_hit_u, self.sysp,
+                    self.z,
+                )
+                theta_c = jnp.where(ok, theta, 0.0)
+                flat_s = jnp.where(ok[:, None], flat_s, 0.0)
+                d_eff = d_slot * ok.astype(jnp.float32)
+                d_n = jnp.sum(d_eff)
+                w_slot = d_eff / jnp.maximum(d_n, 1e-12)
+                agg = self._aggregate(idx, signs, theta_c, w_slot, q_slot)
+                new_flat = jnp.where(d_n > 0, agg[: self.z], flat)
+                any_payload = d_n > 0
+            else:
+                w_slot = wd_slot
+                agg = self._aggregate(idx, signs, theta, w_slot, q_slot)
+                new_flat = jnp.where(jnp.sum(w_slot) > 0, agg[: self.z],
+                                     flat)
+                any_payload = jnp.sum(w_slot) > 0
             if dl_on:
                 exact_flat = new_flat
                 new_flat, dl_next = self._downlink_apply(key, new_flat, flat)
@@ -724,10 +1076,13 @@ class FleetSim:
             else:
                 acc, loss = jnp.float32(0.0), jnp.float32(0.0)
             out = (new_flat, g_obs, s_obs, theta, acc, loss)
+            if faults_on:
+                out = out + (ok, down_u.astype(jnp.float32), n_dropped,
+                             n_timeout_real, n_screened)
             if tap_mse:
                 exact = jnp.einsum("s,sz->z", w_slot, flat_s)
                 mse = jnp.sum((agg[: self.z] - exact) ** 2) / self.z
-                out = out + (jnp.where(jnp.sum(w_slot) > 0, mse,
+                out = out + (jnp.where(any_payload, mse,
                                        jnp.float32(float("nan"))),)
             if dl_on:
                 out = out + (dl_next,)
@@ -768,7 +1123,15 @@ class FleetSim:
         dl_bits_host = (float(core_quant.payload_bits(self.z,
                                                       self.downlink.q_bits))
                         if dl_on else None)
+        faults_on = self.faults.enabled
         u = self.fleet.n_clients
+        # Markov outage state threaded between exec_round calls (the scan's
+        # trailing carry slot); realized Lyapunov terms mirror the scan's
+        # hetero/downlink routing (QCCF modes only, see _round_body)
+        out_state_h = jnp.zeros((u,), jnp.float32) if faults_on else None
+        use_ctx_terms = self.policy_mode in ("greedy", "compiled-ga",
+                                             "host-ga")
+        consts = self.sysp.bound_constants()
         d_sizes = self.fleet.d_sizes.astype(np.float64)
         g_sq = np.ones(u)
         sigma_sq = np.ones(u)
@@ -841,30 +1204,72 @@ class FleetSim:
             w_slot = d_slot / np.maximum(d_slot.sum(dtype=np.float32),
                                          np.float32(1e-12))
             q_slot = np.where(mask, q_exec[cids], 0)
+            v_assigned = np.zeros(u)
+            for c, cid in enumerate(dec.assign):
+                if cid >= 0:
+                    v_assigned[cid] += float(ctx.rates[cid, c])
+            fault_kw = {}
+            if faults_on:
+                # the screen's inputs, compacted like the scan's: assigned
+                # rate and KKT frequency per slot (f32 casts of the host
+                # decision — the one analog leak in the fault replay; the
+                # draws, planes, and weight renormalization are exact)
+                fault_kw = dict(
+                    v_slot=jnp.asarray(np.where(mask, v_assigned[cids], 0.0),
+                                       jnp.float32),
+                    f_slot=jnp.asarray(
+                        np.where(mask, np.asarray(dec.f)[cids], 0.0),
+                        jnp.float32),
+                    out_state=out_state_h,
+                )
             flat, g_obs, s_obs, theta, acc, loss, *extras = exec_round(
                 flat, jnp.asarray(slots, jnp.int32),
                 jnp.asarray(q_slot, jnp.int32),
-                jnp.asarray(w_slot, jnp.float32), keys[n],
+                jnp.asarray(d_slot if faults_on else w_slot, jnp.float32),
+                keys[n], **fault_kw,
             )
             extras = list(extras)
+            ok_h = None
+            n_drop_h = n_tmo_h = n_scr_h = None
+            if faults_on:
+                ok_h = np.asarray(extras.pop(0))
+                out_state_h = extras.pop(0)
+                n_drop_h = float(extras.pop(0))
+                n_tmo_h = float(extras.pop(0))
+                n_scr_h = float(extras.pop(0))
             mse_tap = extras.pop(0) if tap_mse else None
             dl_mse_tap = None
             if dl_on:
                 dl_next = extras.pop(0)
                 if tap_mse:
                     dl_mse_tap = extras.pop(0)
-            sel = cids[mask]
-            g_sq[sel] = 0.7 * g_sq[sel] + 0.3 * np.asarray(g_obs)[mask]
+            # only DELIVERED slots feed the estimators (upd == mask when
+            # faults are off — the historical path, bit for bit)
+            upd = mask if ok_h is None else (mask & ok_h)
+            sel = cids[upd]
+            g_sq[sel] = 0.7 * g_sq[sel] + 0.3 * np.asarray(g_obs)[upd]
             sigma_sq[sel] = 0.7 * sigma_sq[sel] + 0.3 * np.maximum(
-                np.asarray(s_obs)[mask], 1e-8
+                np.asarray(s_obs)[upd], 1e-8
             )
-            theta_max[sel] = np.asarray(theta)[mask]
+            theta_max[sel] = np.asarray(theta)[upd]
+            planned_dt = float(dec.data_term)
+            planned_qt = float(dec.quant_term)
+            if faults_on:
+                # queue feedback at the REALIZED participation, like the
+                # scan (f64 host analog of policy.realized_terms)
+                a_real = np.zeros(u)
+                a_real[sel] = 1.0
+                dt_r, qt_r = bounds.realized_terms(
+                    consts, a_real, d_sizes, ctx.g_sq, ctx.sigma_sq,
+                    ctx.theta_max, np.maximum(np.asarray(dec.q), 1), self.z,
+                    hetero=self.hetero if use_ctx_terms else None,
+                    dl_term=(dl_prev_host if (dl_on and use_ctx_terms)
+                             else 0.0),
+                )
+                dec.data_term = dt_r
+                dec.quant_term = qt_r
             policy.commit(dec)
             cum += dec.total_energy
-            v_assigned = np.zeros(u)
-            for c, cid in enumerate(dec.assign):
-                if cid >= 0:
-                    v_assigned[cid] += float(ctx.rates[cid, c])
             records.append(RoundRecord(
                 round=n, energy=dec.total_energy, cum_energy=cum,
                 accuracy=float(acc), loss=float(loss),
@@ -883,12 +1288,14 @@ class FleetSim:
                 host_metrics.append(obs_metrics.decision_metrics_host(
                     a_np, np.asarray(dec.q), np.asarray(q_cont_host),
                     np.asarray(dec.f), np.asarray(dec.energy), d_sizes,
-                    float(dec.data_term), float(dec.quant_term), self.sysp,
+                    planned_dt, planned_qt, self.sysp,
                     quant_mse=float(mse_tap) if tap_mse else None,
                     ga_best=getattr(dec, "ga_best", None),
                     dl_payload_bits=dl_bits_host,
                     dl_mse=(float(dl_mse_tap) if dl_mse_tap is not None
                             else None),
+                    n_dropped=n_drop_h, n_screened=n_scr_h,
+                    n_timeout_real=n_tmo_h,
                 ))
             if dl_on:
                 # becomes next round's dl_term, as in the scan's carry
@@ -960,6 +1367,7 @@ def build_sim(
     telemetry: Optional[MetricsConfig] = None,
     ledger: Optional[obs_ledger.Ledger] = None,
     downlink: "Optional[DownlinkConfig | str]" = None,
+    faults: Optional[FaultSpec] = None,
 ) -> FleetSim:
     """Mirror of ``repro.fl.experiment.build_experiment`` for the compiled
     engine: same task specs, same dataset/draw seeds, same client drop, and
@@ -995,6 +1403,8 @@ def build_sim(
         policy_mode = scenario.policy if policy_mode is None else policy_mode
         if hetero_weight is None:
             hetero_weight = scenario.lyapunov.hetero_weight
+        if faults is None:
+            faults = scenario.faults
     v_weight = 100.0 if v_weight is None else float(v_weight)
     alpha_dirichlet = 0.5 if alpha_dirichlet is None else float(alpha_dirichlet)
     target_q = 6.0 if target_q is None else float(target_q)
@@ -1066,4 +1476,5 @@ def build_sim(
         policy_mode=policy_mode, ga_config=ga_config,
         hetero=hetero, scenario=scenario, name=name,
         telemetry=telemetry, ledger=ledger, downlink=downlink,
+        faults=faults,
     )

@@ -337,6 +337,32 @@ def quant_term(consts: bounds.BoundConstants, w_round, z, theta_max, q):
     return consts.lipschitz / 2.0 * jnp.sum(w_round * per_client)
 
 
+def realized_terms(a_real, d_sizes, g_sq, sigma_sq, theta_max, q, sysp,
+                   z, hetero=None, dl_term=None):
+    """jnp port of :func:`repro.core.bounds.realized_terms` — eq. 20/21 at
+    the *realized* (post-screen) participation, the queue feedback the
+    fault-tolerant engine uses instead of the planned decision terms.
+
+    A scheduled-but-failed client re-enters the scheduling-exclusion sum
+    and leaves the round weights, exactly like an unscheduled one; all
+    other inputs are the same ones the decision saw (normalized G^2 /
+    sigma^2, pre-update theta_max, the decision's q), so with zero realized
+    faults this reproduces ``finish_decision``'s terms bit for bit (same
+    ops, same order).
+    """
+    af = a_real.astype(jnp.float32)
+    d_n = jnp.sum(af * d_sizes)
+    w_round = jnp.where(a_real > 0, af * d_sizes / jnp.maximum(d_n, 1e-12),
+                        0.0)
+    w_full = d_sizes / jnp.sum(d_sizes)
+    consts = sysp.bound_constants()
+    dt = data_term(consts, af, w_full, w_round, g_sq, sigma_sq, hetero)
+    qt = quant_term(consts, w_round, z, theta_max, jnp.maximum(q, 1))
+    if dl_term is not None:
+        qt = qt + dl_term
+    return dt, qt
+
+
 # --------------------------------------------------------------- decide
 
 def participation_from_assign(assign: jax.Array, rates: jax.Array):

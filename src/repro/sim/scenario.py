@@ -133,6 +133,79 @@ class LyapunovSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Static fault-injection gate (PR 7/8 pattern: all-zero ⇒ the engine
+    never traces a single fault op, byte-identical HLO; any rate > 0 flips
+    ``enabled`` and the *values* ride the dynamic jit argument
+    ``dyn["faults"]`` so a fault-rate sweep shares one compile).
+
+    Four orthogonal fault channels, drawn per round from
+    ``fold_in(round_key, FAULT_KEY_TAG)`` (see ``repro.sim.engine``):
+
+      outage_p / outage_corr — per-client outage process. A client in
+          outage that round is *scheduled but never delivers* (its slot is
+          screened). ``outage_corr`` ∈ [0, 1) makes the process Markov:
+          P(down | was down) = p + corr·(1−p), P(down | was up) =
+          p·(1−corr); corr = 0 is exactly i.i.d. and the stationary
+          outage rate is ``outage_p`` either way.
+      fade_p / fade_db — deep-fade events: with prob ``fade_p`` a client's
+          *realized* uplink rate this round is its planned (KKT-feasible)
+          rate scaled by ``10^(-fade_db/10)``. If the realized round time
+          then exceeds ``t_max``, the planned success becomes a realized
+          timeout and the slot is screened.
+      corrupt_p / corrupt_frac — wire corruption: with prob ``corrupt_p``
+          a slot's u8/u16 index plane and u8 sign plane get random bit
+          flips on a ``corrupt_frac`` fraction of entries (XOR with random
+          bytes). Detected by the range screen (index > 2^q−1 or sign
+          byte > 1); an undetected flip degrades gracefully through the
+          clamped dequantizer.
+      nan_p — NaN/Inf gradient bursts: with prob ``nan_p`` a slot's local
+          update is replaced by all-NaN (or all-Inf) *before* the wire, so
+          its θ (range scalar) is non-finite and the slot is screened.
+    """
+
+    outage_p: float = 0.0
+    outage_corr: float = 0.0
+    fade_p: float = 0.0
+    fade_db: float = 10.0
+    corrupt_p: float = 0.0
+    corrupt_frac: float = 0.01
+    nan_p: float = 0.0
+
+    def __post_init__(self) -> None:
+        for f in ("outage_p", "fade_p", "corrupt_p", "nan_p"):
+            v = getattr(self, f)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"FaultSpec.{f}={v} outside [0, 1]")
+        if not 0.0 <= self.outage_corr < 1.0:
+            raise ValueError(
+                f"FaultSpec.outage_corr={self.outage_corr} outside [0, 1)")
+        if not 0.0 < self.corrupt_frac <= 1.0:
+            raise ValueError(
+                f"FaultSpec.corrupt_frac={self.corrupt_frac} outside (0, 1]")
+        if self.fade_db < 0.0:
+            raise ValueError(f"FaultSpec.fade_db={self.fade_db} < 0")
+
+    @property
+    def enabled(self) -> bool:
+        return (self.outage_p > 0 or self.fade_p > 0
+                or self.corrupt_p > 0 or self.nan_p > 0)
+
+    def dyn_vector(self) -> np.ndarray:
+        """The f32 leaf that rides ``dyn["faults"]`` when enabled:
+        [outage_p, outage_corr, fade_p, fade_mult, corrupt_p,
+        corrupt_frac, nan_p] with ``fade_mult = 10^(-fade_db/10)``
+        (linear rate multiplier, precomputed at build)."""
+        return np.array(
+            [self.outage_p, self.outage_corr, self.fade_p,
+             10.0 ** (-self.fade_db / 10.0), self.corrupt_p,
+             self.corrupt_frac, self.nan_p], np.float32)
+
+
+FAULTS_OFF = FaultSpec()
+
+
+@dataclasses.dataclass(frozen=True)
 class Scenario:
     """One whole experiment configuration as data. All fields are frozen
     and hashable-or-array, so a Scenario can ride a jit boundary as a
@@ -145,11 +218,15 @@ class Scenario:
     data: DataSpec = DataSpec()
     policy: str = "qccf"
     lyapunov: LyapunovSpec = LyapunovSpec()
+    faults: FaultSpec = FAULTS_OFF
 
     def __post_init__(self) -> None:
         assert self.policy in POLICIES, (
             f"unknown policy {self.policy!r}; one of {POLICIES}"
         )
+
+    def with_faults(self, faults: FaultSpec) -> "Scenario":
+        return dataclasses.replace(self, faults=faults)
 
     def with_policy(self, policy: str) -> "Scenario":
         return dataclasses.replace(self, policy=policy)
@@ -229,6 +306,18 @@ def _noniid_a01(n_clients: int, n_channels: int, **kw) -> Scenario:
     )
 
 
+def _single_bs_faulty(n_clients: int, n_channels: int, **kw) -> Scenario:
+    """Single BS under a bursty 10% outage process plus occasional deep
+    fades — the fault-tolerance smoke configuration (see sim/README.md)."""
+    kw.setdefault("faults", FaultSpec(outage_p=0.1, outage_corr=0.5,
+                                      fade_p=0.05, fade_db=10.0))
+    return dataclasses.replace(
+        _single_bs(n_clients=n_clients, n_channels=n_channels, **kw),
+        name="single_bs_faulty",
+    )
+
+
 register_scenario("single_bs", _single_bs)
 register_scenario("cellfree_a4", _cellfree_a4)
 register_scenario("noniid_a01", _noniid_a01)
+register_scenario("single_bs_faulty", _single_bs_faulty)

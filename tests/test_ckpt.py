@@ -1,0 +1,136 @@
+"""Checkpoint substrate hardening (repro.ckpt.checkpoint).
+
+The recovery tentpole leans on three properties regressed here: pytree
+round-trips preserve shapes/dtypes/values exactly (including scalar and
+mixed-dtype leaves, i.e. a sim scan carry); a crash mid-save never
+produces a checkpoint a resumer would pick up (atomicity: latest_step
+skips .tmp files and sidecar-less npz files); and a corrupted or
+inconsistent checkpoint raises CheckpointError instead of silently
+resuming wrong.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.ckpt import (
+    CheckpointError,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+
+def _carry_like_tree():
+    """A sim-carry-shaped pytree: nested dicts, mixed dtypes, scalars."""
+    rng = np.random.default_rng(0)
+    return {
+        "carry": {
+            "c00": rng.normal(size=(64, 128)).astype(np.float32),
+            "c01": rng.normal(size=(8,)).astype(np.float64),
+            "c02": rng.integers(0, 100, (8,)).astype(np.int32),
+            "c03": np.float32(3.25),          # scalar leaf
+            "c04": np.uint8(7),
+        },
+        "out": {
+            "accuracy": rng.random(4).astype(np.float32),
+            "q_levels": rng.integers(1, 9, (4, 8)).astype(np.int32),
+        },
+    }
+
+
+def test_roundtrip_mixed_dtypes_and_scalars(tmp_path):
+    tree = _carry_like_tree()
+    save_checkpoint(str(tmp_path), 3, tree, extra={"note": "x"})
+    loaded, meta = load_checkpoint(str(tmp_path))
+    assert meta["step"] == 3 and meta["note"] == "x"
+    flat_ref = {
+        f"{a}/{b}": v for a, sub in tree.items() for b, v in sub.items()
+    }
+    for path, ref in flat_ref.items():
+        a, b = path.split("/")
+        got = loaded[a][b]
+        assert got.dtype == np.asarray(ref).dtype, path
+        assert got.shape == np.asarray(ref).shape, path
+        np.testing.assert_array_equal(got, np.asarray(ref), err_msg=path)
+    # sidecar records every leaf's shape/dtype
+    for path, spec in meta["arrays"].items():
+        assert spec["dtype"] == str(np.asarray(flat_ref[path]).dtype)
+
+
+def test_latest_step_skips_incomplete(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"a": np.zeros(3)})
+    save_checkpoint(d, 2, {"a": np.zeros(3)})
+    assert latest_step(d) == 2
+    # simulated crash A: a stray mkstemp temp file
+    with open(os.path.join(d, "junkXXXX.tmp"), "wb") as f:
+        f.write(b"partial")
+    # simulated crash B: npz landed, sidecar did not
+    path3 = os.path.join(d, "step_00000003.npz")
+    np.savez(path3, a=np.zeros(3))
+    assert latest_step(d) == 2, "incomplete step 3 must not be the latest"
+    # a resumer landing on the default step gets the complete one
+    _, meta = load_checkpoint(d)
+    assert meta["step"] == 2
+    # but explicitly asking for the incomplete step fails loudly
+    with pytest.raises(CheckpointError):
+        load_checkpoint(d, 3)
+
+
+def test_truncated_npz_raises(tmp_path):
+    d = str(tmp_path)
+    path = save_checkpoint(d, 1, {"a": np.arange(10)})
+    with open(path, "r+b") as f:
+        f.truncate(20)
+    with pytest.raises(CheckpointError):
+        load_checkpoint(d, 1)
+
+
+def test_corrupted_sidecar_rejected(tmp_path):
+    d = str(tmp_path)
+    path = save_checkpoint(d, 1, {"a": np.arange(10, dtype=np.int64),
+                                  "b": np.zeros((2, 3), np.float32)})
+    side = path + ".json"
+    with open(side) as f:
+        meta = json.load(f)
+
+    def rewrite(m):
+        with open(side, "w") as f:
+            json.dump(m, f)
+
+    # wrong shape
+    bad = json.loads(json.dumps(meta))
+    bad["arrays"]["b"]["shape"] = [3, 2]
+    rewrite(bad)
+    with pytest.raises(CheckpointError, match="shape"):
+        load_checkpoint(d, 1)
+    # wrong dtype
+    bad = json.loads(json.dumps(meta))
+    bad["arrays"]["a"]["dtype"] = "float32"
+    rewrite(bad)
+    with pytest.raises(CheckpointError, match="dtype"):
+        load_checkpoint(d, 1)
+    # key-set mismatch
+    bad = json.loads(json.dumps(meta))
+    bad["keys"] = ["a"]
+    rewrite(bad)
+    with pytest.raises(CheckpointError, match="keys"):
+        load_checkpoint(d, 1)
+    # unparseable json
+    with open(side, "w") as f:
+        f.write("{not json")
+    with pytest.raises(CheckpointError):
+        load_checkpoint(d, 1)
+    # intact again -> loads
+    rewrite(meta)
+    tree, m = load_checkpoint(d, 1)
+    assert m["step"] == 1 and tree["a"].dtype == np.int64
+
+
+def test_empty_dir_and_missing(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    assert latest_step(str(tmp_path / "nope")) is None
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path))

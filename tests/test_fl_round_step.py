@@ -146,6 +146,70 @@ def test_fl_round_bad_downlink_mode_raises():
         make_fl_round(cfg, make_host_mesh(), downlink="fp8")
 
 
+@pytest.mark.parametrize("wire_packed", [False, True])
+def test_fl_round_screen_clean_is_exact_noop(wire_packed):
+    """screen=True on a healthy fleet reproduces the unscreened round
+    bit-for-bit (renormalizing all-ok weights is exact) and reports
+    n_screened = 0."""
+    cfg = get_reduced("yi_6b")
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    client_params = jax.tree_util.tree_map(lambda x: x[None], params)
+    batch = _batch(cfg, key, 1)
+    args = (client_params, batch, jnp.array([8], jnp.int32),
+            jnp.array([1.0], jnp.float32), jax.random.PRNGKey(1))
+
+    plain = make_fl_round(cfg, mesh, lr=1e-2, client_axis="data",
+                          wire_packed=wire_packed)
+    scr = make_fl_round(cfg, mesh, lr=1e-2, client_axis="data",
+                        wire_packed=wire_packed, screen=True)
+    ref_stacked, ref_loss, ref_tmax = jax.jit(plain)(*args)
+    new_stacked, loss, tmax, n_screened = jax.jit(scr)(*args)
+    assert float(n_screened) == 0.0
+    np.testing.assert_array_equal(np.asarray(loss), np.asarray(ref_loss))
+    for a, b in zip(jax.tree_util.tree_leaves(new_stacked),
+                    jax.tree_util.tree_leaves(ref_stacked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("wire_packed", [False, True])
+def test_fl_round_screen_blocks_nan_client(wire_packed):
+    """A client whose local step went NaN (poisoned batch mask) must not
+    poison the aggregate: unscreened, the round emits non-finite params;
+    screened, the failed upload is rejected and — with every client failed
+    — the round degrades to a no-op carrying the start params forward."""
+    cfg = get_reduced("yi_6b")
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    client_params = jax.tree_util.tree_map(lambda x: x[None], params)
+    batch = _batch(cfg, key, 1)
+    batch["mask"] = batch["mask"] * jnp.float32(jnp.nan)
+    args = (client_params, batch, jnp.array([8], jnp.int32),
+            jnp.array([1.0], jnp.float32), jax.random.PRNGKey(1))
+
+    plain = make_fl_round(cfg, mesh, lr=1e-2, client_axis="data",
+                          wire_packed=wire_packed)
+    poisoned, _, _ = jax.jit(plain)(*args)
+    # sanity: unscreened, the NaN step corrupts the model — NaN planes on
+    # the packed wire, or a zeroed model through quantize_pytree's
+    # theta>0 guard on the fp32 wire. Either way the params are destroyed.
+    assert any(
+        not bool(jnp.array_equal(a, b)) or not bool(jnp.isfinite(a).all())
+        for a, b in zip(jax.tree_util.tree_leaves(poisoned),
+                        jax.tree_util.tree_leaves(client_params))
+    ), "sanity: the unscreened round should corrupt the model"
+
+    scr = make_fl_round(cfg, mesh, lr=1e-2, client_axis="data",
+                        wire_packed=wire_packed, screen=True)
+    new_stacked, _, _, n_screened = jax.jit(scr)(*args)
+    assert float(n_screened) == 1.0
+    for a, b in zip(jax.tree_util.tree_leaves(new_stacked),
+                    jax.tree_util.tree_leaves(client_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_client_wire_per_leaf_keys_decorrelated():
     """Regression: the packed wire used ONE key for every leaf, so
     same-shape leaves holding identical values produced identical

@@ -227,6 +227,60 @@ def test_default_ledger_env_resolution(tmp_path, monkeypatch):
     assert default_ledger(q).path == q
 
 
+def test_ledger_write_failure_degrades_to_null_sink(tmp_path, monkeypatch):
+    """A persistently failing append must not kill the run: one retry,
+    then one RuntimeWarning, then the ledger becomes the null sink."""
+    led = Ledger(str(tmp_path / "led.jsonl"))
+    calls = {"n": 0}
+
+    def boom(self, line):
+        calls["n"] += 1
+        raise OSError("disk on fire")
+
+    monkeypatch.setattr(Ledger, "_append", boom)
+    with pytest.warns(RuntimeWarning, match="disabling ledger"):
+        assert led.write("round", round=0) is None
+    assert calls["n"] == 2, "exactly one retry before degrading"
+    assert not led.enabled
+    # subsequent writes are silent no-ops (null sink), no more attempts
+    assert led.write("round", round=1) is None
+    assert calls["n"] == 2
+
+
+def test_ledger_write_retries_transient_oserror(tmp_path, monkeypatch):
+    """A transient failure (first append raises, retry succeeds) loses
+    nothing: the event lands and the ledger stays enabled."""
+    path = str(tmp_path / "led.jsonl")
+    led = Ledger(path)
+    real_append = Ledger._append
+    state = {"fail_next": True}
+
+    def flaky(self, line):
+        if state["fail_next"]:
+            state["fail_next"] = False
+            raise OSError("transient")
+        return real_append(self, line)
+
+    monkeypatch.setattr(Ledger, "_append", flaky)
+    ev = led.write("round", round=0)
+    assert ev is not None and led.enabled
+    (read,) = read_ledger(path)
+    assert read["round"] == 0
+
+
+def test_ledger_resume_event_schema(tmp_path):
+    path = str(tmp_path / "led.jsonl")
+    led = Ledger(path)
+    led.write("resume", step=4, action="save", dir="/tmp/ck")
+    led.write("resume", step=4, action="load", dir="/tmp/ck")
+    evs = read_ledger(path)  # read_ledger validates every event
+    assert [e["action"] for e in evs] == ["save", "load"]
+    assert all(e["event"] == "resume" and e["step"] == 4 for e in evs)
+    with pytest.raises(ValueError):
+        validate_event({"schema": 1, "event": "resume", "run_id": "r",
+                        "ts": 0.0, "step": 4})  # missing action
+
+
 def test_validate_event_rejects_malformed():
     ok = {"schema": 1, "event": "round", "run_id": "r", "ts": 0.0, "round": 0}
     validate_event(dict(ok))

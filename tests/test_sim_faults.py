@@ -1,0 +1,373 @@
+"""Fault-tolerant fleet: in-scan fault injection + graceful degradation +
+checkpointed resumable scans (sim.engine FaultSpec machinery).
+
+Covers the three tentpole contracts:
+
+  * static gate — faults off (the default and an explicit FAULTS_OFF)
+    lowers the byte-identical pre-fault scan; faults on compiles ONCE and
+    varying the fault vector never retraces;
+  * graceful degradation — under injected outages / fades / corruption /
+    NaN bursts the global model stays finite, screened slots never touch
+    the aggregate (nan_p=1 freezes the model bit-for-bit), and the
+    host-policy replay reproduces the scan's fault draws and screens
+    decision-for-decision within the existing engine parity bands;
+  * recovery — a segmented run checkpoints its carry mid-experiment and a
+    FRESH sim resumed from that checkpoint finishes bit-for-bit equal to
+    the unsegmented scan.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs.metrics import MetricsConfig
+from repro.sim import build_sim
+from repro.sim.engine import (
+    FAULT_KEY_TAG,
+    draw_outage,
+    fault_keys,
+    screen_slots,
+)
+from repro.sim.policy import HostFastPolicy
+from repro.sim.scenario import FAULTS_OFF, FaultSpec, get_scenario
+
+SEED = 1
+AGGRESSIVE = FaultSpec(outage_p=0.15, outage_corr=0.4, fade_p=0.1,
+                       corrupt_p=0.05, nan_p=0.02)
+
+
+# ------------------------------------------------------------- spec layer
+
+def test_faultspec_validation():
+    assert not FAULTS_OFF.enabled
+    assert FaultSpec(outage_p=0.1).enabled
+    assert FaultSpec(nan_p=0.5).enabled
+    # outage_corr alone enables nothing: it only shapes the outage process
+    assert not FaultSpec(outage_corr=0.5).enabled
+    with pytest.raises(ValueError):
+        FaultSpec(outage_p=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(outage_corr=1.0)
+    with pytest.raises(ValueError):
+        FaultSpec(corrupt_p=0.1, corrupt_frac=0.0)
+    with pytest.raises(ValueError):
+        FaultSpec(fade_db=-1.0)
+    fv = FaultSpec(outage_p=0.1, fade_p=0.2, fade_db=10.0).dyn_vector()
+    assert fv.shape == (7,) and fv.dtype == np.float32
+    np.testing.assert_allclose(fv[3], 0.1)  # 10^(-10/10)
+
+
+def test_faulty_scenario_preset():
+    sc = get_scenario("single_bs_faulty")
+    assert sc.faults.enabled and sc.faults.outage_p == 0.1
+    clean = get_scenario("single_bs")
+    assert not clean.faults.enabled
+    assert clean.with_faults(FaultSpec(nan_p=0.1)).faults.nan_p == 0.1
+
+
+# ------------------------------------------------------------ static gate
+
+def test_faults_off_is_hlo_identical():
+    """No FaultSpec (the default) and an explicit all-zero FAULTS_OFF lower
+    the byte-identical scan; an enabled spec lowers a different program."""
+    base = build_sim("tiny", n_clients=8, seed=SEED, n_test=64)
+    off = build_sim("tiny", n_clients=8, seed=SEED, n_test=64,
+                    faults=FAULTS_OFF)
+    on = build_sim("tiny", n_clients=8, seed=SEED, n_test=64,
+                   faults=FaultSpec(outage_p=0.1))
+    base_txt = base.lower(4).as_text()
+    assert base_txt == off.lower(4).as_text()
+    assert base_txt != on.lower(4).as_text()
+
+
+@pytest.mark.skipif(
+    not os.environ.get("REPRO_FAULTS_HLO_1024"),
+    reason="U=1024 lowering is slow; set REPRO_FAULTS_HLO_1024=1 (CI faults leg)",
+)
+def test_faults_off_is_hlo_identical_u1024():
+    base = build_sim("tiny", n_clients=1024, seed=SEED, n_test=64)
+    off = build_sim("tiny", n_clients=1024, seed=SEED, n_test=64,
+                    faults=FAULTS_OFF)
+    assert base.lower(2).as_text() == off.lower(2).as_text()
+
+
+def test_zero_retrace_across_fault_vectors():
+    """The fault vector is a jit ARGUMENT (dyn leaf): sweeping outage /
+    fade / corruption rates shares ONE compiled scan."""
+    sim = build_sim("tiny", n_clients=8, seed=SEED, n_test=64,
+                    faults=AGGRESSIVE)
+    fn = sim._scan_fn(False)
+    keys, ridx = sim._scan_xs(2)
+    carry = sim._init_carry()
+    jax.block_until_ready(fn(sim._dyn, carry, keys, ridx)[0][0])
+    dyn2 = dict(sim._dyn)
+    dyn2["faults"] = jnp.asarray(
+        FaultSpec(outage_p=0.5, fade_p=0.3, fade_db=20.0,
+                  corrupt_p=0.2, nan_p=0.1).dyn_vector())
+    jax.block_until_ready(fn(dyn2, carry, keys, ridx)[0][0])
+    assert fn._cache_size() == 1, "fault vector retraced the scan"
+
+
+# -------------------------------------------------------- injection draws
+
+def test_markov_outage_statistics():
+    """The correlated outage chain has stationary rate p for any corr, and
+    P(down | was down) = p + corr (1 - p); corr = 0 is exactly i.i.d."""
+    p, corr = 0.2, 0.5
+    fv = jnp.asarray(FaultSpec(outage_p=p, outage_corr=corr).dyn_vector())
+    fv0 = jnp.asarray(FaultSpec(outage_p=p).dyn_vector())
+    u = 256
+    state = jnp.zeros((u,), jnp.float32)
+    hist, hist0 = [], []
+    state0 = jnp.zeros((u,), jnp.float32)
+    for r in range(400):
+        k_out = fault_keys(jax.random.fold_in(jax.random.PRNGKey(0), r))[0]
+        down = draw_outage(k_out, state, fv)
+        hist.append(np.asarray(down))
+        state = down.astype(jnp.float32)
+        down0 = draw_outage(k_out, state0, fv0)
+        hist0.append(np.asarray(down0))
+        state0 = down0.astype(jnp.float32)
+    h = np.stack(hist)  # (R, U)
+    assert abs(h[50:].mean() - p) < 0.02, "stationary outage rate drifted"
+    prev, cur = h[50:-1], h[51:]
+    p_dd = cur[prev].mean()
+    assert abs(p_dd - (p + corr * (1 - p))) < 0.03, "Markov conditional off"
+    h0 = np.stack(hist0)
+    prev0, cur0 = h0[50:-1], h0[51:]
+    assert abs(cur0[prev0].mean() - p) < 0.03, "corr=0 is not i.i.d."
+
+
+def test_fault_key_schedule_tag():
+    """The fault stream is folded off the round key at its own tag — the
+    existing DROP/PROBE/GA/DOWNLINK streams are untouched by construction
+    (distinct fold_in tags), and both engines derive the same 4 keys."""
+    key = jax.random.PRNGKey(123)
+    ks = fault_keys(key)
+    assert ks.shape == (4, 2)
+    ref = jax.random.split(jax.random.fold_in(key, FAULT_KEY_TAG), 4)
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(ref))
+
+
+# ------------------------------------------------------------- the screen
+
+def test_screen_slots_unit_oracle():
+    """Each failure mode flips exactly its slot: outage, realized (faded)
+    timeout, non-finite range, out-of-range wire plane — and an unfaulted
+    planned-feasible slot always delivers."""
+    from repro.sim.policy import SystemParams
+
+    sysp = SystemParams()
+    z = 1000.0
+    s, zp = 5, 16
+    slots = jnp.asarray([0, 1, 2, 3, -1], jnp.int32)  # slot 4 empty
+    q = jnp.full((s,), 4, jnp.int32)
+    d = jnp.full((s,), 100.0, jnp.float32)
+    v = jnp.full((s,), 1e6, jnp.float32)   # fast enough un-faded
+    f = jnp.full((s,), 1e9, jnp.float32)
+    theta = jnp.asarray([1.0, 1.0, np.nan, 1.0, 1.0], jnp.float32)
+    idx = jnp.zeros((s, zp), jnp.uint8)
+    idx = idx.at[3, 0].set(200)            # > 2^4 - 1: corrupted plane
+    signs = jnp.zeros((s, zp), jnp.uint8)
+    down = jnp.zeros((4,), bool).at[1].set(True)     # client 1 in outage
+    fade_hit = jnp.zeros((4,), bool).at[0].set(True)  # client 0 faded hard
+    fade_mult = jnp.where(fade_hit, 1e-7, 1.0).astype(jnp.float32)
+    ok, n_drop, n_tmo, n_scr = screen_slots(
+        slots, q, d, v, f, theta, idx, signs, down, fade_mult, fade_hit,
+        sysp, z)
+    np.testing.assert_array_equal(
+        np.asarray(ok), [False, False, False, False, False])
+    assert float(n_drop) == 1.0 and float(n_tmo) == 1.0
+    assert float(n_scr) == 4.0  # the empty slot is not "screened"
+    # no faults at all -> every scheduled slot delivers
+    ok2, a, b, c = screen_slots(
+        slots, q, d, v, f, jnp.ones((s,), jnp.float32), jnp.zeros_like(idx),
+        signs, jnp.zeros((4,), bool), jnp.ones((4,), jnp.float32),
+        jnp.zeros((4,), bool), sysp, z)
+    np.testing.assert_array_equal(
+        np.asarray(ok2), [True, True, True, True, False])
+    assert float(a) == float(b) == float(c) == 0.0
+
+
+def test_corrupt_sign_plane_is_screened():
+    """At q = 8 every u8 byte is a legal index, so corruption detection
+    rides on the sign plane (a valid sign byte is 0/1; a flipped one
+    almost surely is not)."""
+    from repro.sim.engine import corrupt_planes
+
+    fv = jnp.asarray(
+        FaultSpec(corrupt_p=1.0, corrupt_frac=0.5).dyn_vector())
+    idx = jnp.zeros((4, 64), jnp.uint8)
+    signs = jnp.zeros((4, 64), jnp.uint8)
+    idx_c, signs_c = corrupt_planes(jax.random.PRNGKey(7), idx, signs, fv)
+    assert int(jnp.sum(jnp.max(signs_c, axis=1) > 1)) == 4, (
+        "corrupted sign planes must trip the screen")
+
+
+# --------------------------------------------------- degradation end-to-end
+
+def test_model_stays_finite_under_aggressive_faults():
+    sim = build_sim("tiny", n_clients=8, seed=3, n_test=64,
+                    faults=FaultSpec(outage_p=0.3, fade_p=0.2,
+                                     corrupt_p=0.1, nan_p=0.1),
+                    telemetry=MetricsConfig(enabled=True))
+    res = sim.run_compiled(8)
+    assert np.isfinite(np.asarray(res.accuracy)).all()
+    assert np.isfinite(np.asarray(res.loss)).all()
+    scr = np.asarray(res.metrics["n_screened"])
+    assert np.isfinite(scr).all() and scr.sum() > 0, (
+        "aggressive faults screened nothing — injection is dead")
+    drop = np.asarray(res.metrics["n_dropped"])
+    assert (drop <= scr).all(), "drops are a subset of screens"
+
+
+def test_full_burst_freezes_model_bitwise():
+    """nan_p = 1 kills every upload: the aggregate must degrade to a no-op
+    (the carried flat model is bit-identical round over round), never to a
+    NaN model."""
+    sim = build_sim("tiny", n_clients=8, seed=3, n_test=64,
+                    faults=FaultSpec(nan_p=1.0),
+                    telemetry=MetricsConfig(enabled=True))
+    fn = sim._scan_fn(False)
+    keys, ridx = sim._scan_xs(3)
+    carry0 = sim._init_carry()
+    final_carry, _ = fn(sim._dyn, carry0, keys, ridx)
+    np.testing.assert_array_equal(
+        np.asarray(final_carry[0]), np.asarray(carry0[0]))
+    res = sim.run_compiled(3)
+    np.testing.assert_array_equal(
+        np.asarray(res.metrics["n_screened"]),
+        np.asarray(res.n_scheduled, np.float32))
+
+
+def test_realized_terms_exclusion_and_parity():
+    """The realized Lyapunov feedback recomputes eq. 20/21 at the realized
+    participation: screening a client strictly reduces neither term below
+    the all-delivered value in an arbitrary direction — it equals the
+    planned value when nothing failed, and the jnp (scan) and numpy (host)
+    implementations agree."""
+    from repro.core import bounds
+    from repro.sim import policy as fast_policy
+    from repro.sim.policy import SystemParams
+
+    sysp = SystemParams()
+    rng = np.random.default_rng(0)
+    u = 8
+    d = rng.integers(50, 200, u).astype(np.float64)
+    g = rng.uniform(0.5, 2.0, u)
+    s2 = rng.uniform(0.1, 0.5, u)
+    th = rng.uniform(0.5, 1.5, u)
+    q = rng.integers(1, 9, u)
+    a_plan = np.ones(u)
+    a_real = a_plan.copy()
+    a_real[[2, 5]] = 0.0
+    z = 1000.0
+    consts = sysp.bound_constants()
+    dt_p, qt_p = bounds.realized_terms(consts, a_plan, d, g, s2, th, q, z)
+    dt_r, qt_r = bounds.realized_terms(consts, a_real, d, g, s2, th, q, z)
+    assert dt_r > dt_p, "losing clients must grow the scheduling-exclusion term"
+    dt_j, qt_j = fast_policy.realized_terms(
+        jnp.asarray(a_real, jnp.float32), jnp.asarray(d, jnp.float32),
+        jnp.asarray(g, jnp.float32), jnp.asarray(s2, jnp.float32),
+        jnp.asarray(th, jnp.float32), jnp.asarray(q, jnp.int32), sysp, z)
+    np.testing.assert_allclose(float(dt_j), dt_r, rtol=1e-5)
+    np.testing.assert_allclose(float(qt_j), qt_r, rtol=1e-5)
+
+
+# ------------------------------------------------------- host-replay parity
+
+def test_scan_equals_host_replay_under_faults():
+    """Fault draws, screens, and the degraded aggregation replay
+    bit-for-bit on the host engine: the exact fields (schedule, q,
+    counters) match exactly; analog fields sit in the existing bands."""
+    kw = dict(n_clients=8, seed=SEED, n_test=256, faults=AGGRESSIVE,
+              telemetry=MetricsConfig(enabled=True))
+    sim_a = build_sim("tiny", **kw)
+    res_c = sim_a.run_compiled(6)
+    sim_b = build_sim("tiny", **kw)
+    pol = HostFastPolicy(sim_b.sysp, sim_b.eps1, sim_b.eps2, sim_b.v_weight,
+                         q_cap=8)
+    res_h = sim_b.run_host_policy(pol, 6, channel="sim")
+    np.testing.assert_array_equal(
+        np.array([r.n_scheduled for r in res_h.records]), res_c.n_scheduled)
+    np.testing.assert_array_equal(
+        np.stack([r.q_levels for r in res_h.records]), res_c.q_levels)
+    np.testing.assert_allclose(
+        np.array([r.accuracy for r in res_h.records]), res_c.accuracy,
+        atol=1e-6)
+    np.testing.assert_allclose(
+        np.array([r.energy for r in res_h.records]), res_c.energy, rtol=1e-5)
+    hm = sim_b.last_host_metrics
+    for field in ("n_dropped", "n_screened", "n_timeout_real"):
+        np.testing.assert_array_equal(
+            np.asarray(res_c.metrics[field]),
+            np.array([m[field] for m in hm], np.float32), err_msg=field)
+
+
+# ----------------------------------------------------- segmentation/resume
+
+def _mk_faulty():
+    return build_sim("tiny", n_clients=8, seed=SEED, n_test=64,
+                     faults=AGGRESSIVE)
+
+
+def _assert_results_equal(a, b):
+    for f in ("accuracy", "loss", "energy", "n_scheduled", "q_levels",
+              "lambda1", "lambda2"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f)
+
+
+def test_segmented_equals_unsegmented(tmp_path):
+    full = _mk_faulty().run_compiled(6)
+    seg = _mk_faulty().run_compiled(6, segment=2, ckpt_dir=str(tmp_path))
+    _assert_results_equal(full, seg)
+    # clean engine too (the segmentation layer is fault-agnostic)
+    clean_full = build_sim("tiny", n_clients=8, seed=SEED,
+                           n_test=64).run_compiled(5)
+    clean_seg = build_sim("tiny", n_clients=8, seed=SEED,
+                          n_test=64).run_compiled(5, segment=3)
+    _assert_results_equal(clean_full, clean_seg)
+
+
+def test_resume_from_checkpoint_bitwise(tmp_path):
+    """Kill-and-resume: a FRESH sim restarted from the mid-experiment
+    checkpoint finishes bit-for-bit equal to the unsegmented run, and the
+    ledger records the save/load boundary events."""
+    from repro.obs.ledger import Ledger, read_ledger
+
+    full = _mk_faulty().run_compiled(6)
+    led_path = str(tmp_path / "ledger.jsonl")
+    sim = _mk_faulty()
+    sim.ledger = Ledger(led_path)
+    sim.run_compiled(6, segment=2, ckpt_dir=str(tmp_path / "ck"))
+    sim2 = _mk_faulty()
+    sim2.ledger = Ledger(led_path)
+    res2 = sim2.resume_compiled(str(tmp_path / "ck"))
+    _assert_results_equal(full, res2)
+    evs = [e for e in read_ledger(led_path) if e["event"] == "resume"]
+    assert [e["action"] for e in evs].count("save") >= 2
+    assert any(e["action"] == "load" for e in evs)
+
+
+def test_resume_rejects_mismatched_sim(tmp_path):
+    from repro.ckpt import CheckpointError
+
+    sim = _mk_faulty()
+    sim.run_compiled(6, segment=2, ckpt_dir=str(tmp_path))
+    other_seed = build_sim("tiny", n_clients=8, seed=SEED + 1, n_test=64,
+                           faults=AGGRESSIVE)
+    with pytest.raises(CheckpointError):
+        other_seed.resume_compiled(str(tmp_path))
+    other_faults = build_sim("tiny", n_clients=8, seed=SEED, n_test=64,
+                             faults=FaultSpec(outage_p=0.9))
+    with pytest.raises(CheckpointError):
+        other_faults.resume_compiled(str(tmp_path))
+
+
+def test_segment_requires_ckpt_rules():
+    sim = _mk_faulty()
+    with pytest.raises(ValueError):
+        sim.run_compiled(4, ckpt_dir="/tmp/nope")  # ckpt without segment
