@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig4   — CIFAR-proxy accuracy/energy vs baselines    [paper Fig. 4]
   fig5   — quantization level vs rounds / dataset size [paper Fig. 5]
   kernels— Pallas quant/dequant/aggregate microbench   [Table I payload path]
+  flash  — chunked vs flash vs ring attention matrix   [ISSUE 10 long-context]
   sim    — compiled fleet simulator rounds/sec         [repro.sim scan path]
   roofline — per (arch x shape) dry-run terms          [§Roofline]
 
@@ -261,6 +262,13 @@ def main() -> None:
                                     n_channels=8, scenario="single_bs"))
     emit(bench_wire_ratio())
     emit(bench_moe_alltoall())
+    # chunked vs flash tokens/s (CPU-sized cells; the full matrix incl.
+    # the 128k cell and the 500k ring lower+compile record is
+    #   PYTHONPATH=src python benchmarks/attn_benchmarks.py --json
+    # which also records rows into BENCH_sim.json)
+    from benchmarks import attn_benchmarks as attnb
+
+    emit(attnb.bench_flash_attention(quick=True, record_json=False))
     emit(simb.bench_sim_vs_object(u=8, n_rounds=10))
     emit(flb.bench_v_tradeoff(task="tiny", n_rounds=10))
     emit(flb.bench_task("femnist", betas=(300.0,), n_rounds=6))

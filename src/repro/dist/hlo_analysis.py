@@ -43,6 +43,11 @@ Contract (consumed by ``launch/dryrun.py`` and the benchmarks):
   full-``length`` dimension; on a ``seq``-sharded mesh this is the
   assertion that no big activation was re-replicated along the sequence
   axis (the dry-run gate for the 32k prefill shapes).
+
+  ``no_s2_scores(hlo, length, shards=...) -> [offenders]`` — per-device
+  tensors carrying O(length^2) elements (two seq-multiple dims, or one
+  squared-length-multiple dim): the materialized attention-score
+  signature that ``launch/dryrun.py --require-flash`` asserts away.
 """
 from __future__ import annotations
 
@@ -485,6 +490,63 @@ def full_length_intermediates(
                 if len(dims) > max_rank or length not in dims:
                     continue
                 if ignore_last_dim and length not in dims[:-1]:
+                    continue
+                n = 1
+                for d in dims:
+                    n *= d
+                nbytes = n * _dtype_nbytes(m.group(1))
+                if nbytes < min_bytes:
+                    continue
+                ml = _LHS_RE.match(line)
+                out.append({
+                    "op": ml.group(1) if ml else "?",
+                    "shape": m.group(0),
+                    "bytes": nbytes,
+                    "comp": comp,
+                })
+    out.sort(key=lambda o: -o["bytes"])
+    return out
+
+
+def no_s2_scores(
+    hlo_text: str, length: int, *, shards: int = 1, min_bytes: int = 1 << 20,
+) -> list[dict]:
+    """Offending per-device tensors that carry O(length^2) elements — the
+    materialized-attention-scores signature the flash path must kill.
+
+    A dim "carries" the sequence when it is a positive multiple of the
+    per-device sequence length ``length // shards`` (``shards`` = size of
+    the mesh's ``seq`` axis; 1 off-mesh). An op offends when its result
+    shape has (a) two or more sequence-carrying dims — the (B·H, S, S) /
+    (B·S, S) family, in any dtype, even when the q dim itself is sharded
+    — or (b) a single dim that is a multiple of the squared per-device
+    length (a flattened score matrix). Blockwise attention never trips
+    this: its largest live tensors are O(S·block).
+
+    Same numeric-collision caveat as :func:`full_length_intermediates`:
+    pick gate shapes where no unrelated dim product is a multiple of the
+    per-device length (``min_bytes`` backstops the small stuff like
+    (S, S) iota masks below 1 MiB — those are already absent from the
+    blockwise lowerings anyway).
+    """
+    unit = max(1, length // max(1, shards))
+    comps = _split_computations(hlo_text)
+    out: list[dict] = []
+    for comp, lines in comps.items():
+        for line in lines:
+            if "=" not in line:
+                continue
+            seg = line.split("=", 1)[1]
+            seg = seg.split("(", 1)[0]
+            for m in _SHAPE_RE.finditer(seg):
+                if not m.group(2):
+                    continue
+                dims = [int(d) for d in m.group(2).split(",")]
+                carrying = sum(1 for d in dims if d >= unit and d % unit == 0)
+                flattened = any(
+                    d >= unit * unit and d % (unit * unit) == 0 for d in dims
+                )
+                if carrying < 2 and not flattened:
                     continue
                 n = 1
                 for d in dims:

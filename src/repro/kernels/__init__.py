@@ -1,2 +1,8 @@
-from repro.kernels import ops, ref
+from repro.kernels import flash_attention, ops, ref
+from repro.kernels.flash_attention import (
+    flash_attention_pallas,
+    flash_attention_xla,
+    kv_block_range,
+    ring_flash_attention,
+)
 from repro.kernels.stochastic_quant import aggregate, dequantize, quantize

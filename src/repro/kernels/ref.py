@@ -44,6 +44,57 @@ def dequantize_ref(
     return jnp.where(signs > 0, -mag, mag)
 
 
+def flash_attention_ref(
+    q: jax.Array,        # (B, S, H, hd)
+    k: jax.Array,        # (B, T, KV, hd), H % KV == 0
+    v: jax.Array,        # (B, T, KV, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    k_offset: int = 0,
+    with_lse: bool = False,
+):
+    """Dense oracle for the flash-attention kernel family.
+
+    Materializes the full (B, H, S, T) score matrix — O(S*T) memory, for
+    parity tests at small shapes only. Matches the flash convention for
+    fully-masked rows: output 0 and lse = -inf-ish (NEG_INF), instead of
+    softmax's uniform average over -1e30 logits.
+    """
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    kx = jnp.repeat(k, g, axis=2)  # oracle may be O(B*T*H*hd); kernel may not
+    vx = jnp.repeat(v, g, axis=2)
+    sc = jnp.einsum(
+        "bshd,bthd->bhst",
+        q.astype(jnp.float32),
+        kx.astype(jnp.float32),
+    ) * (hd ** -0.5)
+    q_pos = q_offset + jnp.arange(s)
+    k_pos = k_offset + jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    neg = jnp.float32(-1e30)
+    sc = jnp.where(mask[None, None], sc, neg)
+    m = sc.max(axis=-1)
+    p = jnp.exp(sc - m[..., None])
+    p = jnp.where(mask[None, None], p, 0.0)  # exact-zero fully-masked rows
+    l = p.sum(axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, vx.astype(jnp.float32))
+    out = (out / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]).astype(
+        q.dtype
+    )
+    if with_lse:
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse.transpose(0, 2, 1)  # (B, S, H)
+    return out
+
+
 def aggregate_ref(
     idx: jax.Array,      # (K, M, 128) uint8
     signs: jax.Array,    # (K, M, 128) uint8

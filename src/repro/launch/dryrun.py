@@ -110,7 +110,10 @@ def while_trip_counts(hlo_text: str) -> list[int]:
 def run_one(arch: str, shape_name: str, *, multi_pod: bool, fl_round: bool,
             causal_skip: bool, mesh_shape=None,
             require_seq_sharded: bool = False,
-            require_alltoall: bool = False) -> dict:
+            require_alltoall: bool = False,
+            require_flash: bool = False) -> dict:
+    import dataclasses
+
     import jax
     from repro.configs import get_config, long_context_variant
     from repro.launch.mesh import make_production_mesh, mesh_label
@@ -122,6 +125,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, fl_round: bool,
     shape = INPUT_SHAPES[shape_name]
     if shape_name == "long_500k":
         cfg = long_context_variant(cfg)
+    if require_flash:
+        cfg = dataclasses.replace(cfg, attn_impl="flash")
     mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
     n_chips = mesh.devices.size
 
@@ -189,6 +194,30 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, fl_round: bool,
             raise AssertionError(
                 "no all-to-all in compiled HLO (expected expert-sharded "
                 f"MoE dispatch on mesh {dict(mesh.shape)})"
+            )
+    if require_flash:
+        from repro.dist.hlo_analysis import no_s2_scores
+
+        # The flash lowering must never materialize attention scores: no
+        # per-device tensor may carry O(S^2) elements (S measured per
+        # device when the mesh shards seq). On a seq>1 mesh the ring
+        # variant must also be the active path — its K/V rotation is the
+        # only collective-permute source in these steps.
+        seq_sh = mesh.shape.get("seq", 1)
+        offenders = no_s2_scores(hlo, shape.seq_len, shards=seq_sh)
+        gates["no_s2_scores_ok"] = not offenders
+        gates["s2_offenders"] = offenders[:10]
+        n_cp = coll["counts"].get("collective-permute", 0)
+        gates["ring_collective_permutes"] = n_cp
+        if offenders:
+            raise AssertionError(
+                f"{len(offenders)} O(S^2) score tensors in flash-lowered "
+                f"{shape_name} (seq shards={seq_sh}); top: {offenders[:3]}"
+            )
+        if seq_sh > 1 and not n_cp:
+            raise AssertionError(
+                "no collective-permute in flash lowering on a "
+                f"seq={seq_sh} mesh — ring attention path not taken"
             )
 
     flops = float(cost.get("flops", 0.0))
@@ -318,6 +347,12 @@ def main() -> int:
     ap.add_argument("--causal-skip", action="store_true")
     ap.add_argument("--require-seq-sharded", action="store_true")
     ap.add_argument("--require-alltoall", action="store_true")
+    ap.add_argument("--require-flash", action="store_true",
+                    help="lower with cfg.attn_impl='flash' and fail if the "
+                         "compiled HLO carries any per-device O(S^2) score "
+                         "tensor (hlo_analysis.no_s2_scores); on a seq>1 "
+                         "mesh additionally require the ring variant's "
+                         "collective-permute K/V rotation")
     ap.add_argument("--wire-ratio", action="store_true",
                     help="per-arch fl-round inter-pod byte-ratio record "
                          "(both wire modes, 2x16x16 mesh)")
@@ -339,6 +374,7 @@ def main() -> int:
                 mesh_shape=args.mesh_shape,
                 require_seq_sharded=args.require_seq_sharded,
                 require_alltoall=args.require_alltoall,
+                require_flash=args.require_flash,
             )
     except Exception as e:  # noqa: BLE001 — the sweep wants the record
         mesh_lbl = args.mesh_shape or (

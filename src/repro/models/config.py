@@ -40,6 +40,11 @@ class ModelConfig:
     dtype: str = "bfloat16"
     # chunk size for sub-quadratic attention paths / SSD scan
     chunk_size: int = 512
+    # long-seq attention implementation: "chunked" (lax.scan online
+    # softmax) or "flash" (blockwise kernel; ring variant auto-selected
+    # on a seq>1 activation mesh). Dense stays the short-seq /
+    # non-divisible-shape fallback either way.
+    attn_impl: str = "chunked"
     tie_embeddings: bool = False
     source: str = ""       # citation for the assigned config
 

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.activations import shard_act
+from repro.kernels import flash_attention as _flash
+from repro.kernels.flash_attention import kv_block_range  # noqa: F401 (re-export)
 
 # ----------------------------------------------------------------- init
 
@@ -136,21 +138,28 @@ def chunked_attention(
     b, s, h, hd = q.shape
     assert s % chunk == 0, (s, chunk)
     nq = s // chunk
-    k = _expand_kv(k, h)
-    v = _expand_kv(v, h)
+    kvh = k.shape[2]
     scale = hd ** -0.5
-    kc = k.reshape(b, nq, chunk, h, hd)
-    vc = v.reshape(b, nq, chunk, h, hd)
+    # K/V stay in their KV heads here; each chunk is expanded to H heads
+    # inside kv_step, so GQA live memory is O(chunk * H), not O(S * H).
+    kc = k.reshape(b, nq, chunk, kvh, hd)
+    vc = v.reshape(b, nq, chunk, kvh, hd)
     qc = q.reshape(b, nq, chunk, h, hd)
 
-    def q_chunk_body(qi: int, q_blk: jax.Array, n_kv_chunks: int) -> jax.Array:
-        """Process one query chunk against kv chunks [0, n_kv_chunks)."""
+    def q_chunk_body(
+        qi: int, q_blk: jax.Array, kv_lo: int, kv_hi: int
+    ) -> jax.Array:
+        """Process one query chunk against kv chunks [kv_lo, kv_hi)."""
         q_pos = qi * chunk + jnp.arange(chunk)
 
         def kv_step(carry, kj):
             m, l, acc = carry
-            k_blk = jax.lax.dynamic_index_in_dim(kc, kj, axis=1, keepdims=False)
-            v_blk = jax.lax.dynamic_index_in_dim(vc, kj, axis=1, keepdims=False)
+            k_blk = _expand_kv(
+                jax.lax.dynamic_index_in_dim(kc, kj, axis=1, keepdims=False), h
+            )
+            v_blk = _expand_kv(
+                jax.lax.dynamic_index_in_dim(vc, kj, axis=1, keepdims=False), h
+            )
             k_pos = kj * chunk + jnp.arange(chunk)
             sc = jnp.einsum(
                 "bshd,bthd->bhst", q_blk, k_blk, preferred_element_type=jnp.float32
@@ -175,21 +184,57 @@ def chunked_attention(
         l0 = jnp.zeros((b, h, chunk), jnp.float32)
         a0 = jnp.zeros((b, h, chunk, hd), jnp.float32)
         (m, l, acc), _ = jax.lax.scan(
-            kv_step, (m0, l0, a0), jnp.arange(n_kv_chunks)
+            kv_step, (m0, l0, a0), jnp.arange(kv_lo, kv_hi)
         )
         out = acc / jnp.maximum(l[..., None], 1e-30)
         return out.transpose(0, 2, 1, 3)  # (b, chunk, h, hd)
 
-    if causal_skip and causal:
-        outs = [q_chunk_body(qi, qc[:, qi], qi + 1) for qi in range(nq)]
+    if causal_skip and (causal or window):
+        # scan only the KV chunks with any visible (q, k) pair: chunks
+        # past the causal diagonal AND chunks entirely left of the
+        # sliding-window start are never visited (kv_block_range is the
+        # single source of truth for this geometry — shared with the
+        # flash kernels and the masked-compute-count test).
+        outs = [
+            q_chunk_body(
+                qi,
+                qc[:, qi],
+                *kv_block_range(
+                    qi, block_q=chunk, block_k=chunk, nk=nq,
+                    causal=causal, window=window,
+                ),
+            )
+            for qi in range(nq)
+        ]
         return jnp.concatenate(outs, axis=1).astype(q.dtype)
 
     def outer(qi):
-        return q_chunk_body(qi, jax.lax.dynamic_index_in_dim(qc, qi, 1, False), nq)
+        return q_chunk_body(qi, jax.lax.dynamic_index_in_dim(qc, qi, 1, False), 0, nq)
 
     out = jax.lax.map(outer, jnp.arange(nq))  # (nq, b, chunk, h, hd)
     out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
     return out.astype(q.dtype)
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    block_q: int = 512, block_k: int = 512,
+    causal: bool = True, window: int = 0,
+    impl: str = "xla", interpret: bool = True,
+) -> jax.Array:
+    """Blockwise flash attention (see ``kernels/flash_attention.py``).
+
+    Same signature family as ``chunked_attention`` but never touches an
+    (S x T) score tensor and never expands K/V to H heads: GQA grouping
+    and causal/window block skipping happen inside the block schedule.
+    ``impl='pallas'`` selects the TPU kernel (interpret-mode off-TPU),
+    ``impl='xla'`` its executable twin. S/T must divide block_q/block_k —
+    the model dispatch falls back to dense/chunked otherwise.
+    """
+    return _flash.flash_attention(
+        q, k, v, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, impl=impl, interpret=interpret,
+    )
 
 
 def decode_attention(

@@ -19,7 +19,11 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.dist.activations import shard_act
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.activations import current_activation_plan, shard_act
+from repro.kernels import flash_attention as _flash
 from repro.models import layers, mamba2, moe, rwkv6
 from repro.models.config import ModelConfig
 
@@ -142,6 +146,68 @@ def abstract_params(cfg: ModelConfig, key: jax.Array | None = None) -> Params:
 # attention block helpers
 # =====================================================================
 
+def _flash_dispatch(
+    cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool, window: int,
+) -> jax.Array:
+    """``attn_impl="flash"`` path: single-device blockwise flash, or the
+    ring variant when the active plan shards the sequence dim.
+
+    The ring decision is static (mesh topology, shape divisibility): on
+    a seq>1 activation mesh each device keeps its Q shard and the K/V
+    shards rotate via ``lax.ppermute`` inside ``shard_map`` — the
+    remaining mesh axes stay ``auto`` so the heads/batch shardings from
+    ``shard_act`` keep propagating through the body.
+    """
+    b, s, h, _hd = q.shape
+    kvh = k.shape[2]
+    blk = cfg.chunk_size  # dispatch already guarantees s % chunk_size == 0
+    plan = current_activation_plan()
+    if plan is not None:
+        ent = plan.resolve(s, "seq")
+        if isinstance(ent, str):
+            n = plan.axis_size(ent)
+            if n > 1 and s % (n * blk) == 0:
+                # Fully-manual shard_map (jax 0.4.37's partial-auto mode
+                # rejects/crashes on the manual-subgroup collectives this
+                # body needs), so every mesh axis gets an explicit spec:
+                #   * heads ride the model axis only when BOTH the query
+                #     and KV head counts divide it — contiguous head
+                #     blocks then align with whole GQA groups, keeping
+                #     the in-kernel head->kv mapping local;
+                #   * batch follows the plan's progressive dp rule;
+                #   * axes in no spec carry replicated data (check_rep
+                #     off: the body is deterministic per shard).
+                msz = plan.axis_size("model")
+                heads_ent = (
+                    "model"
+                    if msz > 1 and h % msz == 0 and kvh % msz == 0
+                    else None
+                )
+                used = frozenset(x for x in (ent, heads_ent) if x)
+                b_ent = plan.resolve(b, "batch", used=used)
+                spec = P(b_ent, ent, heads_ent, None)
+
+                def ring_body(qs, ks, vs, ids):
+                    # ids: P(seq)-sharded iota — each shard reads its own
+                    # ring index (lax.axis_index lowers to a PartitionId
+                    # op XLA rejects in these nested-manual bodies)
+                    return _flash.ring_flash_attention(
+                        qs, ks, vs, axis_name=ent, axis_size=n,
+                        block_q=blk, block_k=blk, causal=causal,
+                        window=window, shard_id=ids[0],
+                    )
+
+                return shard_map(
+                    ring_body, mesh=plan.mesh,
+                    in_specs=(spec, spec, spec, P(ent)), out_specs=spec,
+                    check_rep=False,
+                )(q, k, v, jnp.arange(n, dtype=jnp.int32))
+    return layers.flash_attention(
+        q, k, v, block_q=blk, block_k=blk, causal=causal, window=window
+    )
+
+
 def _self_attention(
     cfg: ModelConfig, p: dict, x: jax.Array, *,
     causal: bool, positions: jax.Array, causal_skip: bool = False,
@@ -158,6 +224,8 @@ def _self_attention(
     s = x.shape[1]
     if s <= DENSE_ATTN_MAX_SEQ or s % cfg.chunk_size != 0:
         o = layers.dense_attention(q, k, v, causal=causal, window=window)
+    elif cfg.attn_impl == "flash":
+        o = _flash_dispatch(cfg, q, k, v, causal=causal, window=window)
     else:
         o = layers.chunked_attention(
             q, k, v, chunk=cfg.chunk_size, causal=causal, window=window,
